@@ -1,0 +1,64 @@
+"""Re-run the static HLO analysis over the archived dry-run modules
+(results/dryrun/*.hlo.gz) and refresh the JSON records in place — the
+offline half of the paper's workflow (new model, same early artifacts).
+
+Usage:  PYTHONPATH=src python -m benchmarks.reanalyze [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.core import hlo_counter as HC
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def reanalyze(path_json: str) -> dict | None:
+    gz = path_json[:-5] + ".hlo.gz"
+    if not os.path.exists(gz):
+        return None
+    with open(path_json) as f:
+        record = json.load(f)
+    if record.get("status") != "ok":
+        return None
+    with gzip.open(gz, "rt") as f:
+        text = f.read()
+    hc = HC.analyze(text)
+    record.update({
+        "hlo_flops_per_chip": hc.flops,
+        "hlo_bytes_per_chip": hc.total_bytes,
+        "bytes_by_class": dict(hc.bytes_by_class),
+        "collective_operand_bytes": hc.collective_operand_bytes,
+        "collective_wire_bytes": hc.collective_wire_bytes,
+        "collective_by_kind": dict(hc.collective_by_kind),
+        "n_collectives": hc.n_collectives,
+        "warnings": hc.warnings[:10],
+    })
+    with open(path_json, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="*")
+    args = ap.parse_args()
+    n = 0
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              args.pattern + ".json"))):
+        r = reanalyze(path)
+        if r:
+            n += 1
+            print(f"[reanalyzed] {os.path.basename(path)} "
+                  f"flops={r['hlo_flops_per_chip']:.3g} "
+                  f"bytes={r['hlo_bytes_per_chip']:.3g}", flush=True)
+    print(f"done: {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""SRoofline harness: per (arch x shape x mesh) three-term roofline from the
+dry-run artifacts in ``results/dryrun/`` (see repro.launch.dryrun).
+
+Formulas (per-chip semantics; the SPMD module IS the per-chip program):
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (197 TF/s bf16)
+    memory term     = HLO_bytes / HBM_bw                 (819 GB/s)
+    collective term = collective_bytes / (links x link_bw) (4 x 50 GB/s)
+
+plus the refined memory term from the paper's access-class model, the
+MODEL_FLOPS/HLO_FLOPs useful ratio, and the dominant bottleneck.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.hbm import TPU_V5E
+from repro.core.roofline import RooflineCell, markdown_table
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_cells(pattern: str = "*", tag: str = "") -> list[RooflineCell]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              pattern + ".json"))):
+        mesh_part = os.path.basename(path)[:-5].split("__")[-1]
+        want = (f"16x16-{tag}", f"2x16x16-{tag}") if tag else \
+            ("16x16", "2x16x16")
+        if mesh_part not in want:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        hw = TPU_V5E
+        wire = r["collective_wire_bytes"]
+        cfg = get_config(r["arch"])
+        sh = SHAPES[r["shape"]]
+        model_bytes = cfg.model_bytes(r.get("tokens_per_step", 0),
+                                      kind=r.get("kind", "train"),
+                                      batch=sh.global_batch,
+                                      seq_len=sh.seq_len)
+        cells.append(RooflineCell(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            chips=int(r["chips"]),
+            flops_per_chip=r["hlo_flops_per_chip"],
+            bytes_per_chip=r["hlo_bytes_per_chip"],
+            collective_operand_bytes=r["collective_operand_bytes"],
+            collective_wire_bytes=wire,
+            n_collectives=r["n_collectives"],
+            model_flops_global=r["model_flops_global"],
+            model_bytes_global=model_bytes,
+            t_compute=r["hlo_flops_per_chip"] / hw.peak_flops,
+            t_memory_naive=r["hlo_bytes_per_chip"] / hw.hbm_bw,
+            t_memory_refined=_refined_memory(r, hw),
+            t_collective=(wire / (hw.ici_bw * hw.ici_links)
+                          + r["n_collectives"] * hw.ici_hop_latency),
+            extra={"mem_gb_per_chip":
+                   (r.get("memory_analysis") or {}).get("total_bytes", 0) / 1e9,
+                   "tokens_per_step": r.get("tokens_per_step"),
+                   "kind": r.get("kind")},
+        ))
+    return cells
+
+
+def _refined_memory(r: dict, hw) -> float:
+    from repro.core.hbm import AccessClass, Traffic, memory_time
+    comps = []
+    for name, b in (r.get("bytes_by_class") or {}).items():
+        cls = {"stream": AccessClass.STREAM, "strided": AccessClass.STRIDED,
+               "gather": AccessClass.GATHER}.get(name, AccessClass.STREAM)
+        comps.append(Traffic(cls, b, row_bytes=512.0, name=name))
+    return memory_time(comps, hw)
+
+
+def status_rows() -> list[dict]:
+    """All 40 cells incl. skipped, for the SDry-run status table."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        if base.split("__")[-1] not in ("16x16", "2x16x16"):
+            continue  # tagged variant
+        with open(path) as f:
+            r = json.load(f)
+        rows.append({k: r.get(k) for k in
+                     ("arch", "shape", "mesh", "status", "reason",
+                      "compile_s")}
+                    | {"mem_gb": (r.get("memory_analysis") or {}).get(
+                        "total_bytes", 0) / 1e9})
+    return rows
+
+
+def main() -> None:
+    cells = load_cells()
+    print(markdown_table(cells))
+
+
+if __name__ == "__main__":
+    main()

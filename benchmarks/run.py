@@ -1,0 +1,100 @@
+"""Benchmark driver — one function per paper table/figure plus the TPU
+roofline harness.  Prints ``name,us_per_call,derived`` CSV summary rows (the
+harness contract) followed by the detailed per-table CSVs.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--details] [--roofline-only]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+
+
+def _csv(rows: list[dict]) -> str:
+    if not rows:
+        return ""
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    return buf.getvalue()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--details", action="store_true",
+                    help="print full per-table CSVs")
+    ap.add_argument("--roofline-only", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as PT
+
+    summary: list[tuple[str, float, str]] = []
+    details: dict[str, list[dict]] = {}
+
+    if not args.roofline_only:
+        for name, fn in PT.ALL.items():
+            rows, us = PT.timed(fn)
+            details[name] = rows
+            derived = _derive(name, rows)
+            summary.append((name, us, derived))
+
+    # roofline (reads dry-run artifacts if present)
+    try:
+        from benchmarks import roofline as RL
+        import time
+        t0 = time.perf_counter()
+        cells = RL.load_cells()
+        us = (time.perf_counter() - t0) / max(1, len(cells)) * 1e6
+        if cells:
+            import statistics
+            ufl = [c.useful_flops_ratio for c in cells
+                   if c.shape == "train_4k" and c.mesh == "16x16"]
+            coll = sum(1 for c in cells if c.dominant == "collective")
+            derived = (f"cells={len(cells)} "
+                       f"train_useful_flops_median={statistics.median(ufl):.2f} "
+                       f"collective_dominant={coll}")
+        else:
+            derived = "no dry-run artifacts yet"
+        summary.append(("roofline", us, derived))
+        details["roofline"] = [c.as_row() for c in cells]
+    except Exception as e:  # noqa: BLE001
+        summary.append(("roofline", 0.0, f"error: {e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.details:
+        for name, rows in details.items():
+            print(f"\n== {name} ==")
+            sys.stdout.write(_csv(rows))
+
+
+def _derive(name: str, rows: list[dict]) -> str:
+    if name == "table4_applications":
+        errs = [r["err_pct"] for r in rows]
+        return (f"max_err={max(errs):.1f}% mean_err={sum(errs)/len(errs):.1f}% "
+                f"(paper: 9.2%/7.6%)")
+    if name == "table5_comparison":
+        ours = max(r["err_ours_pct"] for r in rows)
+        wang = max(r["err_wang_pct"] for r in rows)
+        hls = max(r["err_hlscope_pct"] for r in rows)
+        return f"max_err ours={ours}% wang={wang}% hlscope={hls}%"
+    if name == "fig4_lsu_microbench":
+        errs = [r["err_vs_sim_pct"] for r in rows if r["memory_bound"]]
+        return f"mean_err_vs_sim={sum(errs)/max(1,len(errs)):.1f}% (mem-bound only)"
+    if name == "fig5_stride":
+        bca = {r["delta"]: r["t_norm"] for r in rows if r["lsu"] == "bca"}
+        return f"bca_linear_delta4={bca.get(4)} (expect ~4.0)"
+    if name == "fig3_membound":
+        mb = sum(1 for r in rows if r["memory_bound"])
+        return f"membound_points={mb}/{len(rows)}"
+    return f"rows={len(rows)}"
+
+
+if __name__ == "__main__":
+    main()

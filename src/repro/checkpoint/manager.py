@@ -1,0 +1,128 @@
+"""Atomic, mesh-independent, optionally-async checkpointing.
+
+Layout:  <dir>/step_<N>/{manifest.json, arr_<k>.npy}
+
+* **Atomic**: written to ``step_<N>.tmp`` then ``os.rename``d — a crash
+  mid-save can never corrupt the latest checkpoint (restore scans only
+  finalized dirs).
+* **Mesh-independent**: leaves are stored as full logical arrays; restore
+  reshards onto whatever mesh the restarted job has — elastic rescale is a
+  restore with different shardings (runtime/elastic.py).
+* **Async**: ``save(..., blocking=False)`` device_gets then writes on a
+  background thread so the training loop keeps stepping (checkpoint I/O
+  overlaps compute — the standard large-run trick).
+
+Production note (DESIGN.md): at 300 B+ parameters the per-leaf full-array
+format would be replaced by per-shard files; the manifest/atomic-rename/
+auto-resume logic is the part this framework contributes and is format-
+agnostic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> tuple[list[Any], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        if blocking:
+            self._write(step, host_leaves, treedef)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, treedef),
+                daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, leaves: list[np.ndarray], treedef) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), leaf)
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._cleanup()
+
+    def _cleanup(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, *, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        """Restore into the structure of ``like``.
+
+        ``shardings``: optional pytree (or single sharding) — the restored
+        arrays are placed with it, which is how a checkpoint written on one
+        mesh is resumed on another (elastic rescale)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        leaves, treedef = _flatten(like)
+        loaded = [np.load(os.path.join(d, f"arr_{i}.npy"))
+                  for i in range(len(leaves))]
+        if shardings is not None:
+            shard_leaves = (jax.tree.leaves(shardings)
+                            if not hasattr(shardings, "memory_kind")
+                            else [shardings] * len(loaded))
+            loaded = [jax.device_put(x, s)
+                      for x, s in zip(loaded, shard_leaves)]
+        else:
+            loaded = [jax.device_put(x.astype(l.dtype) if hasattr(l, "dtype")
+                                     else x)
+                      for x, l in zip(loaded, leaves)]
+        return jax.tree.unflatten(treedef, loaded), step

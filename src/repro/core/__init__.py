@@ -1,0 +1,21 @@
+"""Core: the paper's analytical memory model.
+
+Faithful FPGA/HLS layer (paper Eqs. 1-10):
+    fpga      -- DRAM/BSP parameter sets (Table III)
+    lsu       -- LSU taxonomy (Table I) and descriptors (Table II)
+    model     -- T_exe estimation + memory-bound criterion
+    dramsim   -- event-driven DRAM oracle (board substitute)
+    baselines -- Wang [6] / HLScope+ [7] comparison models
+    apps      -- Table IV applications + SIV microbenchmarks
+
+TPU/XLA adaptation layer (DESIGN.md S2):
+    hbm       -- access-class taxonomy + HBM/ICI parameters
+    hlo       -- compiled-HLO traffic extraction (memory + collectives)
+    predictor -- lowered step -> classified traffic -> time prediction
+    roofline  -- three-term roofline report
+    autotune  -- model-guided configuration search
+"""
+
+from repro.core.fpga import DDR4_1866, DDR4_2666, BspParams, DramParams, STRATIX10_BSP
+from repro.core.lsu import Lsu, LsuType, make_global_access
+from repro.core.model import KernelEstimate, estimate, memory_bound_ratio

@@ -1,0 +1,109 @@
+"""Model-guided configuration search — the paper's end use-case, on TPU.
+
+The paper's pitch: a fast model over early compiler artifacts lets you
+explore the design space without paying for the full build (bitstream there,
+a pod reservation here).  ``autotune`` does exactly that: enumerate candidate
+knob settings (KV-cache sharding axis, gradient compression, remat policy,
+attention tile sizes), *lower + compile on CPU* (seconds per candidate),
+predict each candidate's step time with the analytical model, and rank —
+no TPU time spent.
+
+Used by examples/autotune_sharding.py and the SPerf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Iterable
+
+import jax
+
+from repro.core import hlo_counter as _hc
+from repro.core import predictor as _pred
+from repro.core.hbm import TpuParams, TPU_V5E
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    name: str
+    overrides: dict            # ModelConfig field overrides
+    train_overrides: dict      # TrainConfig field overrides
+
+
+@dataclasses.dataclass
+class TrialResult:
+    candidate: Candidate
+    prediction: _pred.StepPrediction
+    compile_s: float
+    memory_bytes: float | None
+
+    @property
+    def t_step(self) -> float:
+        return self.prediction.t_step_overlapped
+
+    def summary(self) -> dict:
+        p = self.prediction
+        return {
+            "name": self.candidate.name,
+            "t_step_ms": p.t_step_overlapped * 1e3,
+            "bottleneck": p.bottleneck,
+            "t_compute_ms": p.t_compute * 1e3,
+            "t_memory_ms": p.t_memory * 1e3,
+            "t_collective_ms": p.t_collective * 1e3,
+            "mem_gb": (self.memory_bytes or 0) / 1e9,
+            "compile_s": self.compile_s,
+        }
+
+
+def default_candidates(kind: str) -> list[Candidate]:
+    out = [Candidate("baseline", {}, {})]
+    if kind in ("decode", "long_decode"):
+        out += [
+            Candidate("kv-heads", {}, {"kv_shard": "heads"}),
+            Candidate("kv-seq", {}, {"kv_shard": "seq"}),
+        ]
+    if kind == "train":
+        out += [
+            Candidate("grad-bf16", {}, {"grad_compression": "bf16"}),
+            Candidate("no-remat", {"remat": False}, {}),
+            Candidate("attn-big-tiles", {"attn_block_q": 1024,
+                                         "attn_block_kv": 2048}, {}),
+        ]
+    return out
+
+
+def run_trial(cfg, shape, mesh, candidate: Candidate,
+              hw: TpuParams = TPU_V5E) -> TrialResult:
+    """Lower+compile one candidate and predict its step time (no execution)."""
+    import time
+
+    from repro.core import hlo as HLO
+    from repro.launch.steps import TrainConfig, build_step
+
+    cfg_c = dataclasses.replace(cfg, **candidate.overrides)
+    tcfg = TrainConfig(**candidate.train_overrides) \
+        if candidate.train_overrides else TrainConfig()
+    t0 = time.time()
+    built = build_step(cfg_c, shape, mesh, tcfg)
+    compiled = built.fn.lower(*built.args).compile()
+    dt = time.time() - t0
+    text = compiled.as_text()
+    pred = _pred.predict(text, HLO.cost_analysis_stats(compiled), hw)
+    mem = HLO.memory_analysis_stats(compiled).get("total_bytes")
+    return TrialResult(candidate=candidate, prediction=pred, compile_s=dt,
+                       memory_bytes=mem)
+
+
+def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
+             hw: TpuParams = TPU_V5E) -> list[TrialResult]:
+    """Rank candidates by predicted step time (ascending)."""
+    cands = list(candidates) if candidates is not None \
+        else default_candidates(shape.kind)
+    results = []
+    for c in cands:
+        try:
+            results.append(run_trial(cfg, shape, mesh, c, hw))
+        except Exception as e:  # noqa: BLE001 — a failed candidate is data
+            print(f"[autotune] {c.name} failed: {type(e).__name__}: {e}")
+    results.sort(key=lambda r: r.t_step)
+    return results

@@ -1,0 +1,88 @@
+"""Hardware parameter sets for the faithful FPGA/DRAM model (paper Table III).
+
+The paper evaluates on an Intel Stratix 10 GX Development Kit with one DDR4
+DIMM.  Table III gives the DRAM datasheet values; the BSP/IP parameters
+(``burst_cnt``, ``max_th``) come from the generated Verilog (param
+BURSTCOUNT_WIDTH / MAX_THREADS).  Defaults below are the values that make the
+paper's own numbers self-consistent:
+
+* ``burst_cnt = 4`` -> max transaction = 2**4 * dq * bl = 1024 B, which
+  reproduces the paper's measured effective-bandwidth drop from 14.2 GB/s
+  (1 LSU) to 10.5 GB/s (many LSUs):  1024 B / (1024/bw + T_row) = 10.7 GB/s.
+* ``max_th = 128`` -> the Fig. 5b "max_th knee" appears exactly at stride 7
+  for SIMD=16 int accesses (max_reqs = 128*64/(7+1) = 1024 = page).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DramParams:
+    """DRAM datasheet values (paper Table II `Datasheet` rows + Table III)."""
+
+    name: str
+    f_mem: float        # memory frequency [Hz] (I/O bus clock)
+    dq: int             # memory data width [bytes]
+    bl: int             # memory burst length [beats]
+    t_rcd: float        # row activation time [s]
+    t_rp: float         # precharge (row miss) time [s]
+    t_wr: float         # write recovery time [s]
+    banks: int = 4      # paper SIV: "2GB DDR4 ... 4 memory banks"
+    row_bytes: int = 8192  # DDR4 page size per bank
+
+    @property
+    def bw_mem(self) -> float:
+        """Peak DRAM bandwidth [B/s]: dq * 2 * f_mem (Eq. 2, DDR double rate)."""
+        return self.dq * 2.0 * self.f_mem
+
+    @property
+    def t_row(self) -> float:
+        """Row-miss inter-command delay (Eq. 6): T_RCD + T_RP."""
+        return self.t_rcd + self.t_rp
+
+    @property
+    def min_burst_bytes(self) -> int:
+        """Minimum DRAM burst transaction size: dq * bl."""
+        return self.dq * self.bl
+
+
+# Paper Table III: DDR4-1866 on the Stratix 10 GX devkit.  f_mem = 933.3 MHz.
+DDR4_1866 = DramParams(
+    name="DDR4-1866",
+    f_mem=933.3e6,
+    dq=8,
+    bl=8,
+    t_rcd=13.5e-9,
+    t_rp=13.5e-9,
+    t_wr=15e-9,
+)
+
+# Second BSP used in the Table V comparison: DDR4-2666 (f_mem = 1333 MHz).
+# JEDEC DDR4-2666 speed-bin timings (19-19-19): tRCD = tRP = 14.25 ns.
+DDR4_2666 = DramParams(
+    name="DDR4-2666",
+    f_mem=1333.0e6,
+    dq=8,
+    bl=8,
+    t_rcd=14.25e-9,
+    t_rp=14.25e-9,
+    t_wr=15e-9,
+)
+
+DRAM_CONFIGS = {d.name: d for d in (DDR4_1866, DDR4_2666)}
+
+
+@dataclasses.dataclass(frozen=True)
+class BspParams:
+    """BSP / generated-IP parameters (paper Table II `Verilog` rows)."""
+
+    burst_cnt: int = 4   # BURSTCOUNT_WIDTH: log2(max #min-bursts per transaction)
+    max_th: int = 128    # MAX_THREADS: max coalesced threads per request
+
+    def max_transaction_bytes(self, dram: DramParams) -> int:
+        """Eq. 5 upper bound: 2**burst_cnt * dq * bl."""
+        return (1 << self.burst_cnt) * dram.min_burst_bytes
+
+
+STRATIX10_BSP = BspParams()

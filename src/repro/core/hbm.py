@@ -1,0 +1,126 @@
+"""TPU memory-system parameters and the access-class taxonomy.
+
+This is the hardware-adaptation of the paper's Table I + Table III to the
+TPU target (DESIGN.md S2).  The LSU types become *access classes* of
+HLO-level memory traffic; the DRAM datasheet becomes the TPU v5e datasheet
+constants plus HBM transaction parameters.
+
+Class mapping (paper -> TPU):
+
+    BC_ALIGNED        -> STREAM      contiguous tile-aligned HBM traffic
+    BC_NON_ALIGNED    -> STRIDED     layout-changing / sub-transaction rows
+    BC_WRITE_ACK      -> GATHER      data-dependent row gather/scatter
+    ATOMIC_PIPELINED  -> SERIALIZED  collision-prone scatter-accumulate
+    PIPELINED (local) -> VMEM        on-chip, no HBM traffic
+
+Each class has the same two-term structure as the paper's model: a bandwidth
+term at class efficiency ``K`` (the `K_lsu` analogue) and a per-transaction
+latency term ``T_row`` amortized by the memory-level parallelism the access
+pattern allows (the bank-interleaving analogue of Eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class AccessClass(enum.Enum):
+    STREAM = "stream"
+    STRIDED = "strided"
+    GATHER = "gather"
+    SERIALIZED = "serialized"
+    VMEM = "vmem"
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuParams:
+    """TPU chip + interconnect constants (v5e datasheet values as given)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # HBM bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per ICI link (~50 GB/s/link)
+    ici_links: int = 4                  # links per chip on a 2D torus
+    hbm_bytes: float = 16e9             # HBM capacity per chip
+    vmem_bytes: float = 128e6           # VMEM per chip (order of magnitude)
+    # HBM transaction model (the burst/`dq*bl` analogue):
+    txn_bytes: int = 512                # HBM transaction granularity
+    t_row: float = 28e-9                # row-miss latency (tRCD+tRP class)
+    mlp: int = 64                       # outstanding-transaction parallelism
+    ici_hop_latency: float = 1e-6       # per-hop collective launch latency
+    # Class efficiency factors K (the K_lsu analogue; fraction of peak HBM
+    # bandwidth a pure stream of this class sustains):
+    k_stream: float = 0.92              # refresh + arbitration losses
+    k_strided: float = 0.92             # before the sub-row penalty below
+    k_gather: float = 0.92              # before the per-row transaction waste
+
+    @property
+    def ridge_flops_per_byte(self) -> float:
+        """Roofline ridge point: FLOP/byte where compute == memory time."""
+        return self.peak_flops / self.hbm_bw
+
+
+TPU_V5E = TpuParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """One classified traffic component of a compiled step (the Lsu analogue).
+
+    ``bytes`` counts *useful* bytes; ``row_bytes`` is the contiguous run
+    length of the access pattern (minor-dim extent for strided ops, the
+    gathered row size for gathers) — the paper's ``ls_width``/``delta``
+    information collapsed to what HLO exposes.
+    """
+
+    access_class: AccessClass
+    nbytes: float
+    row_bytes: float = 512.0
+    name: str = ""
+
+
+def traffic_time(t: Traffic, hw: TpuParams = TPU_V5E) -> tuple[float, float]:
+    """(T_ideal, T_ovh) for one traffic component — Eqs. 2 and 4 transplanted.
+
+    * T_ideal = useful bytes / peak HBM bandwidth (identical for all classes,
+      exactly like Eq. 2).
+    * T_ovh   = wasted-transaction transfer time + per-transaction row
+      latency amortized over the class's memory-level parallelism.
+    """
+    t_ideal = t.nbytes / hw.hbm_bw
+    if t.access_class is AccessClass.VMEM or t.nbytes <= 0:
+        return t_ideal, 0.0
+
+    if t.access_class is AccessClass.STREAM:
+        # only the stream-efficiency loss (the 14.93 -> 14.2 GB/s analogue)
+        t_ovh = t.nbytes / (hw.hbm_bw * hw.k_stream) - t_ideal
+        return t_ideal, max(0.0, t_ovh)
+
+    row = max(1.0, t.row_bytes)
+    txns_per_row = max(1.0, -(-row // hw.txn_bytes))        # ceil
+    fetched_per_row = txns_per_row * hw.txn_bytes
+    waste = max(0.0, fetched_per_row / row - 1.0)           # Eq. 8 analogue
+    n_rows = t.nbytes / row
+    n_txn = n_rows * txns_per_row
+
+    if t.access_class is AccessClass.STRIDED:
+        t_ovh = (t.nbytes * waste) / (hw.hbm_bw * hw.k_strided)
+        t_ovh += t.nbytes / (hw.hbm_bw * hw.k_strided) - t_ideal
+        return t_ideal, max(0.0, t_ovh)
+
+    if t.access_class is AccessClass.GATHER:
+        # wasted transfer + one T_row per transaction, amortized over the
+        # outstanding-transaction parallelism (bank interleaving analogue).
+        t_ovh = (t.nbytes * waste) / (hw.hbm_bw * hw.k_gather)
+        t_ovh += n_txn * hw.t_row / hw.mlp
+        return t_ideal, t_ovh
+
+    # SERIALIZED: Eq. 10 — a full read+write row cycle per transaction, no
+    # amortization (collisions serialize).
+    t_ovh = n_txn * (2.0 * hw.t_row)
+    return t_ideal, t_ovh
+
+
+def memory_time(components: list[Traffic], hw: TpuParams = TPU_V5E) -> float:
+    """Eq. 1 transplanted: sum of per-class (T_ideal + T_ovh)."""
+    return sum(sum(traffic_time(c, hw)) for c in components)

@@ -1,0 +1,218 @@
+"""The paper's analytical model (Eqs. 1-10), faithful to the FPGA/HLS setting.
+
+Execution time of a memory-bound kernel is estimated as
+
+    T_exe = sum_i  delta_i * (T_ideal_i + T_ovh_i)            (Eq. 1)
+
+over all GMI LSUs ``i``, where
+
+    T_ideal_i = ls_bytes_i * ls_acc_i / bw_mem                (Eq. 2)
+
+is the DRAM-bandwidth floor (identical for every LSU type) and ``T_ovh_i``
+captures the DRAM row-miss overhead, whose form depends on the LSU type:
+
+* burst-coalesced (Eq. 4):  0 when #lsu < 2 (bank interleaving hides row
+  opens for a single stream), else one ``T_row`` per effective burst,
+  with ``T_row = T_RCD + T_RP``  (Eq. 6) and the effective ``burst_size``
+  from Eq. 5 (aligned), Eqs. 7-8 (non-aligned, the ``max_th`` knee), or
+  Eq. 5 + wasted-burst inflation + ``T_WR``  (write-ACK, Eq. 9);
+* atomic-pipelined (Eq. 10): every atomic performs a read and a write, so
+  ``T_row = 2*(T_RCD + T_RP) + T_WR`` per operation (divided by the
+  vectorization factor ``f`` when the operand is loop-constant and the
+  compiler merges updates).
+
+The static memory-bound criterion is
+
+    sum_i ls_width_i / (dq * bl * K_lsu_i)  >=  1             (Eq. 3)
+
+with ``K_lsu = delta`` for coalescing LSUs and 1 for write-ACK/atomic.
+
+Interpretation notes (ambiguities in the paper text, resolved here and
+validated against the paper's own numbers in tests/benchmarks):
+
+* Write-ACK "each burst only consumes ls_bytes increasing the total time by
+  dq*bl/ls_bytes" (SIII-A3) is modelled as extra *transfer* time inside
+  ``T_ovh`` (Eq. 2 is explicitly type-independent), i.e.
+  ``T_ovh += ls_acc * (dq*bl - ls_bytes) / bw_mem``.
+* Atomic Eq. 10 gives a *per-operation* overhead; the LSU total is
+  ``ls_acc`` times that (Fig. 4d shows time linear in #ga).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.fpga import BspParams, DramParams, STRATIX10_BSP
+from repro.core.lsu import Lsu, LsuType
+
+
+@dataclasses.dataclass(frozen=True)
+class LsuTiming:
+    """Per-LSU breakdown of the estimate."""
+
+    lsu: Lsu
+    burst_size: float      # effective bytes per DRAM transaction
+    n_bursts: float        # number of DRAM transactions issued
+    t_ideal: float         # Eq. 2 [s]
+    t_ovh: float           # Eq. 4 / 9 / 10 [s]
+
+    @property
+    def t_total(self) -> float:
+        """Contribution to Eq. 1: delta * (T_ideal + T_ovh)."""
+        return self.lsu.delta * (self.t_ideal + self.t_ovh)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    """Model output for one kernel."""
+
+    t_exe: float                     # Eq. 1 [s]
+    memory_bound: bool               # Eq. 3
+    bound_ratio: float               # LHS of Eq. 3
+    per_lsu: tuple[LsuTiming, ...]
+
+    @property
+    def t_ideal(self) -> float:
+        return sum(t.lsu.delta * t.t_ideal for t in self.per_lsu)
+
+    @property
+    def t_ovh(self) -> float:
+        return sum(t.lsu.delta * t.t_ovh for t in self.per_lsu)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(t.lsu.total_bytes for t in self.per_lsu)
+
+    @property
+    def effective_bandwidth(self) -> float:
+        """Useful bytes / predicted time [B/s] — paper SV-A1's 14.2->10.5 GB/s."""
+        return self.total_bytes / self.t_exe if self.t_exe > 0 else math.inf
+
+
+def k_lsu(lsu: Lsu) -> float:
+    """Eq. 3 coalescing-efficiency factor per LSU type."""
+    if lsu.lsu_type in (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED, LsuType.BC_CACHE):
+        return float(lsu.delta)
+    # write-ACK (paper SIII-A3: "K_lsu equals 1") and atomic.
+    return 1.0
+
+
+def burst_size_bytes(lsu: Lsu, dram: DramParams, bsp: BspParams) -> float:
+    """Effective DRAM transaction size for this LSU [bytes]."""
+    max_txn = bsp.max_transaction_bytes(dram)  # Eq. 5: 2**burst_cnt * dq * bl
+    if lsu.lsu_type in (LsuType.BC_ALIGNED, LsuType.BC_CACHE, LsuType.BC_WRITE_ACK):
+        return float(max_txn)
+    if lsu.lsu_type is LsuType.BC_NON_ALIGNED:
+        # Eq. 7: the thread-count trigger caps the assembled request.
+        max_reqs = bsp.max_th * lsu.ls_width / (lsu.delta + 1)
+        # Eq. 8: whichever trigger fires first defines the effective burst.
+        if max_reqs <= max_txn:
+            return max_reqs / lsu.delta
+        return lsu.ls_width / lsu.delta
+    if lsu.lsu_type is LsuType.ATOMIC_PIPELINED:
+        return float(dram.min_burst_bytes)  # no burst grouping at all
+    raise ValueError(f"{lsu.lsu_type} does not issue DRAM bursts")
+
+
+def t_row_seconds(lsu: Lsu, dram: DramParams) -> float:
+    """Row-miss inter-command delay for this LSU type [s]."""
+    if lsu.lsu_type in (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED, LsuType.BC_CACHE):
+        return dram.t_row                                   # Eq. 6
+    if lsu.lsu_type is LsuType.BC_WRITE_ACK:
+        return dram.t_row + dram.t_wr                       # Eq. 9
+    if lsu.lsu_type is LsuType.ATOMIC_PIPELINED:
+        return 2.0 * dram.t_row + dram.t_wr                 # Eq. 10 (read+write)
+    raise ValueError(f"{lsu.lsu_type} has no DRAM row timing")
+
+
+def lsu_timing(
+    lsu: Lsu,
+    dram: DramParams,
+    bsp: BspParams,
+    *,
+    n_lsu: int,
+    f: int = 1,
+) -> LsuTiming:
+    """Timing terms for a single LSU (Eqs. 2, 4-10)."""
+    t_ideal = lsu.total_bytes / dram.bw_mem                 # Eq. 2
+    bsz = burst_size_bytes(lsu, dram, bsp)
+    n_bursts = lsu.total_bytes / bsz
+    t_row = t_row_seconds(lsu, dram)
+
+    if lsu.lsu_type is LsuType.ATOMIC_PIPELINED:
+        # Eq. 10: per-operation overhead, merged across f when val is constant.
+        per_op = t_row / f if lsu.val_constant else t_row
+        t_ovh = lsu.ls_acc * per_op
+        return LsuTiming(lsu=lsu, burst_size=bsz, n_bursts=float(lsu.ls_acc),
+                         t_ideal=t_ideal, t_ovh=t_ovh)
+
+    # Burst-coalesced family, Eq. 4: a single stream never thrashes rows.
+    if n_lsu < 2:
+        t_ovh = 0.0
+    else:
+        t_ovh = n_bursts * t_row
+    if lsu.lsu_type is LsuType.BC_WRITE_ACK:
+        # Wasted-burst transfer inflation (SIII-A3): each dq*bl burst carries
+        # only ls_bytes useful bytes.
+        waste = dram.min_burst_bytes - lsu.ls_bytes
+        if waste > 0:
+            t_ovh += lsu.ls_acc * waste / dram.bw_mem
+        if n_lsu < 2:
+            # the ACK round-trip itself is never hidden
+            t_ovh += n_bursts * t_row
+    return LsuTiming(lsu=lsu, burst_size=bsz, n_bursts=n_bursts,
+                     t_ideal=t_ideal, t_ovh=t_ovh)
+
+
+def memory_bound_ratio(lsus: Sequence[Lsu], dram: DramParams) -> float:
+    """LHS of Eq. 3."""
+    return sum(lsu.ls_width / (dram.min_burst_bytes * k_lsu(lsu)) for lsu in lsus)
+
+
+def estimate(
+    lsus: Sequence[Lsu],
+    dram: DramParams,
+    bsp: BspParams = STRATIX10_BSP,
+    *,
+    f: int = 1,
+) -> KernelEstimate:
+    """Full model: Eq. 3 classification + Eq. 1 execution time."""
+    glob = [l for l in lsus if l.lsu_type.is_global]
+    if not glob:
+        return KernelEstimate(t_exe=0.0, memory_bound=False, bound_ratio=0.0,
+                              per_lsu=())
+    ratio = memory_bound_ratio(glob, dram)
+    timings = tuple(
+        lsu_timing(l, dram, bsp, n_lsu=len(glob), f=f) for l in glob
+    )
+    t_exe = sum(t.t_total for t in timings)                 # Eq. 1
+    # Write-ACK / atomic kernels are *latency*-bound at the memory even when
+    # their request width is narrow (the paper models NW and the atomic
+    # microbenchmarks as memory bound; their serialization happens in the
+    # GMI, not the kernel pipeline).
+    latency_bound = any(
+        l.lsu_type in (LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED)
+        for l in glob
+    )
+    return KernelEstimate(
+        t_exe=t_exe,
+        memory_bound=ratio >= 1.0 or latency_bound,
+        bound_ratio=ratio,
+        per_lsu=timings,
+    )
+
+
+def pipeline_time(
+    n_work_items: int,
+    *,
+    f: int = 1,
+    f_kernel: float = 300e6,
+    depth: int = 300,
+    ii: int = 1,
+) -> float:
+    """Simple kernel-pipeline bound (outside the paper's scope; used only to
+    reproduce Fig. 3's compute-bound points — the paper defers those to prior
+    models [6,7]):  (n_wi/f * II + depth) / f_kernel.
+    """
+    return (n_work_items / f * ii + depth) / f_kernel

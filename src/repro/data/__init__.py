@@ -1,0 +1,1 @@
+from repro.data.pipeline import MemmapDataset, SyntheticDataset, make_dataset

@@ -1,0 +1,26 @@
+"""jit'd wrapper: model-layout decode attention via the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_s", "interpret"))
+def gqa_decode(q, k_cache, v_cache, kv_len, *, softcap=0.0, block_s=512,
+               interpret=None):
+    """q: (B, 1, Hq, D); caches: (B, S, Hkv, D) -> (B, 1, Hq, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, one, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q[:, 0].reshape(B, Hkv, G, D)
+    out = decode_attention(qg, k_cache, v_cache, kv_len,
+                           softcap=softcap, block_s=block_s,
+                           scale=1.0 / (D ** 0.5), interpret=interpret)
+    return out.reshape(B, 1, Hq, D)

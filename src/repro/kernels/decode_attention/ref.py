@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len, *, softcap=0.0):
+    """q: (B,Hkv,G,D); caches (B,S,Hkv,D); kv_len scalar -> (B,Hkv,G,D)."""
+    B, Hkv, G, D = q.shape
+    S = k_cache.shape[1]
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.astype(q.dtype)

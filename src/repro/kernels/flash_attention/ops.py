@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model's (B, S, H, D) layout, handles GQA head mapping, pads
+``seq`` to block multiples and ``d_head`` to the 128-lane MXU width, and
+falls back to interpret mode off-TPU (CPU CI / tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_kv", "interpret"))
+def mha(q, k, v, *, causal=True, window=None, softcap=0.0,
+        block_q=512, block_kv=512, interpret=None):
+    """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, Hq, D = q.shape
+    Skv = k.shape[1]
+    # kernel layout: (B, H, S, D)
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    d_pad = (-D) % 128 if not interpret else 0
+    if d_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    sq_pad = (-Sq) % bq
+    skv_pad = (-Skv) % bkv
+    if sq_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    if skv_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          softcap=softcap, block_q=bq, block_kv=bkv,
+                          scale=1.0 / (D ** 0.5), interpret=interpret)
+    out = out[:, :, :Sq, :D]
+    return out.swapaxes(1, 2)

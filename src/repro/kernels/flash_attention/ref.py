@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal/local)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import dense_attention
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0):
+    """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D).  f32 math."""
+    out = dense_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), causal=causal,
+                          window=window, softcap=softcap)
+    return out.astype(q.dtype)

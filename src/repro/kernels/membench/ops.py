@@ -1,0 +1,28 @@
+"""jit'd wrappers for the membench kernels (CPU interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.membench import kernel as K
+
+
+def _interp(v):
+    return jax.default_backend() != "tpu" if v is None else v
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def aligned_sum(xs, *, block=2048, interpret=None):
+    return K.aligned_sum(list(xs), block=block, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "block", "interpret"))
+def strided_sum(xs, *, delta, block=2048, interpret=None):
+    return K.strided_sum(list(xs), delta=delta, block=block,
+                         interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gather_sum(xs, idx, *, block=2048, interpret=None):
+    return K.gather_sum(list(xs), idx, block=block, interpret=_interp(interpret))

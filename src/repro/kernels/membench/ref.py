@@ -1,0 +1,37 @@
+"""Oracles for the membench kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aligned_sum_ref(xs):
+    out = xs[0].astype(jnp.float32)
+    for x in xs[1:]:
+        out = out + x.astype(jnp.float32)
+    return out.astype(xs[0].dtype)
+
+
+def strided_sum_ref(xs, *, delta, block):
+    n_out = xs[0].shape[0] // delta
+    n_blocks = n_out // block
+
+    def pick(x):
+        # i-th output block reads the (i*delta)-th input block
+        blocks = x.reshape(-1, block)
+        sel = blocks[jnp.arange(n_blocks) * delta]
+        return sel.reshape(-1)
+
+    out = pick(xs[0]).astype(jnp.float32)
+    for x in xs[1:]:
+        out = out + pick(x).astype(jnp.float32)
+    return out.astype(xs[0].dtype)
+
+
+def gather_sum_ref(xs, idx, *, block):
+    def pick(x):
+        return x.reshape(-1, block)[idx].reshape(-1)
+
+    out = pick(xs[0]).astype(jnp.float32)
+    for x in xs[1:]:
+        out = out + pick(x).astype(jnp.float32)
+    return out.astype(xs[0].dtype)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the chunked mLSTM kernel (CPU interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def chunked_mlstm(q, k, v, li, lf, *, chunk=256, interpret=None):
+    """q,k,v: (B,S,H,dh); li/lf: (B,S,H) -> (B,S,H,dh)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    out = mlstm_chunk(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), li.transpose(0, 2, 1),
+                      lf.transpose(0, 2, 1), chunk=c, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Oracle: strictly sequential mLSTM recurrence (per-head)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_chunk_ref(q, k, v, li, lf):
+    """q,k,v: (B,H,S,dh); li/lf: (B,H,S) log gates.  f32 sequential scan."""
+    B, H, S, dh = q.shape
+
+    def step(carry, inp):
+        C, n = carry
+        qt, kt, vt, lit, lft = inp
+        i = jnp.exp(lit)[..., None]
+        f = jnp.exp(lft)[..., None]
+        C = C * f[..., None] + i[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = n * f + i * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), 1.0)
+        return (C, n), num / den[..., None]
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    xs = (q.transpose(2, 0, 1, 3).astype(jnp.float32),
+          k.transpose(2, 0, 1, 3).astype(jnp.float32),
+          v.transpose(2, 0, 1, 3).astype(jnp.float32),
+          li.transpose(2, 0, 1).astype(jnp.float32),
+          lf.transpose(2, 0, 1).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, (C0, n0), xs)
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype)

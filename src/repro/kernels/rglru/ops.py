@@ -1,0 +1,22 @@
+"""jit'd wrapper for the RG-LRU scan kernel (with CPU interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def scan(a, b, *, block_s=256, block_w=512, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, W = a.shape
+    bs = min(block_s, S)
+    while S % bs:
+        bs -= 1
+    bw = min(block_w, W)
+    while W % bw:
+        bw -= 1
+    return rglru_scan(a, b, block_s=bs, block_w=bw, interpret=interpret)

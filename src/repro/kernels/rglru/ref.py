@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 (f32 math).  a,b: (B,S,W)."""
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h.astype(a.dtype)

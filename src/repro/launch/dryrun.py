@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers, SPMD-
+partitions and compiles, and extract the roofline inputs.
+
+For each cell:
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis            -> fits + XLA's own counts
+    trip-aware HLO analysis (core.hlo_counter) -> FLOPs / per-class bytes /
+                                                  collective bytes
+
+Results are cached as JSON under ``results/dryrun/`` — the roofline
+benchmark and EXPERIMENTS.md read from there.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import SHAPES, cell_status
+from repro.core import hlo as HLO
+from repro.core import hlo_counter as HC
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import TrainConfig, build_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def default_train_config(cfg) -> TrainConfig:
+    """Per-arch defaults: >=100B-parameter models keep AdamW moments in bf16
+    (the optimizer-state memory trick; 314B grok would not fit f32 moments
+    on 256 chips — memory math in EXPERIMENTS.md SDry-run)."""
+    from repro.optim import OptimizerConfig
+    if cfg.param_count() >= 1e11:
+        return TrainConfig(optimizer=OptimizerConfig(state_dtype="bfloat16"))
+    return TrainConfig()
+
+
+def cell_path(arch: str, shape: str, mesh_name: str, tag: str = "") -> str:
+    suffix = f"-{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             tcfg: TrainConfig | None = None, tag: str = "",
+             save: bool = True, keep_text: bool = False,
+             cfg_overrides: dict | None = None) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if tcfg is None:
+        tcfg = default_train_config(cfg)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, reason = cell_status(cfg, shape)
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "skipped", "reason": reason,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        if save:
+            _save(record, arch, shape_name, mesh_name, tag)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        built = build_step(cfg, shape, mesh, tcfg)
+        lowered = built.fn.lower(*built.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        text = compiled.as_text()
+        mem = HLO.memory_analysis_stats(compiled)
+        cost = HLO.cost_analysis_stats(compiled)
+        hc = HC.analyze(text)
+
+        tokens = shape.global_batch * (shape.seq_len if shape.kind in
+                                       ("train", "prefill") else 1)
+        record.update({
+            "status": "ok",
+            "reason": "",
+            "chips": int(mesh.devices.size),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": mem,
+            "xla_cost": cost,
+            "hlo_flops_per_chip": hc.flops,
+            "hlo_bytes_per_chip": hc.total_bytes,
+            "bytes_by_class": dict(hc.bytes_by_class),
+            "collective_operand_bytes": hc.collective_operand_bytes,
+            "collective_wire_bytes": hc.collective_wire_bytes,
+            "collective_by_kind": dict(hc.collective_by_kind),
+            "n_collectives": hc.n_collectives,
+            "tokens_per_step": tokens,
+            "model_flops_global": cfg.model_flops(
+                tokens, training=shape.kind == "train"),
+            "kind": shape.kind,
+            "warnings": hc.warnings[:10],
+        })
+        if keep_text:
+            record["hlo_text"] = text
+        # archive the compiled HLO so analyses can re-run offline
+        if save:
+            import gzip
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            gz = cell_path(arch, shape_name, mesh_name, tag)[:-5] + ".hlo.gz"
+            with gzip.open(gz, "wt") as f:
+                f.write(text)
+    except Exception as e:  # noqa: BLE001 — record the failure, it's a bug
+        record.update({"status": "failed",
+                       "reason": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+    if save:
+        _save({k: v for k, v in record.items() if k != "hlo_text"},
+              arch, shape_name, mesh_name, tag)
+    return record
+
+
+def _save(record: dict, arch: str, shape: str, mesh_name: str, tag: str) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(cell_path(arch, shape, mesh_name, tag), "w") as f:
+        json.dump(record, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--kv-shard", default="auto")
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value (repeatable)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    def _parse(v: str):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        if v in ("true", "false"):
+            return v == "true"
+        return v
+
+    overrides = {k: _parse(v) for k, v in
+                 (item.split("=", 1) for item in args.set)}
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = cell_path(arch, shape, mesh_name, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {arch} {shape} {mesh_name}")
+                    continue
+                cfg = get_config(arch)
+                tcfg = default_train_config(cfg)
+                if args.kv_shard != "auto" or args.grad_compression != "none":
+                    import dataclasses as _dc
+                    tcfg = _dc.replace(tcfg, kv_shard=args.kv_shard,
+                                       grad_compression=args.grad_compression)
+                rec = run_cell(arch, shape, multi_pod=mp, tcfg=tcfg,
+                               tag=args.tag, cfg_overrides=overrides)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    ma = rec.get("memory_analysis") or {}
+                    gb = ma.get("total_bytes", 0) / 1e9
+                    extra = (f" mem/chip={gb:.2f}GB compile={rec['compile_s']}s "
+                             f"flops/chip={rec['hlo_flops_per_chip']:.3g}")
+                elif status == "failed":
+                    extra = " " + rec["reason"][:160]
+                print(f"[{status}] {arch} {shape} {mesh_name}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

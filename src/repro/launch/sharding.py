@@ -1,0 +1,328 @@
+"""Sharding policy: logical-axis rules for activations and path-based
+PartitionSpecs for parameters, optimizer state, batches and caches.
+
+Strategy (DESIGN.md S3):
+* batch over ("pod","data") — pure DP across pods, FSDP within a pod;
+* parameters FSDP-sharded over "data" on one dimension and tensor-parallel
+  over "model" on the other (ZeRO-3 via GSPMD: per-layer all-gather under
+  the remat'd scan);
+* MoE experts expert-parallel over "model" when the expert count divides the
+  axis, else tensor-parallel inside experts (grok-1's 8 experts);
+* GQA KV heads shard over "model" when divisible; otherwise the *decode KV
+  cache shards its sequence dim* over "model" (pod-level flash-decoding: XLA
+  inserts the softmax-merge collectives) — selectable via ``kv_shard``;
+* single-stream long-context decode (batch=1) can't data-parallelize, so
+  channel-like axes spill onto ("data","model") jointly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Resolved axis assignment for one (cfg, mesh, shape) combination."""
+
+    batch_axes: tuple[str, ...] | None
+    fsdp_axes: tuple[str, ...] | None       # weight-dim sharding (ZeRO-3)
+    tp_axis: str | None                     # tensor-parallel axis
+    heads_axes: Any
+    kv_heads_axes: Any
+    kv_seq_axes: Any                        # decode-cache sequence sharding
+    expert_axes: Any
+    expert_ff_axes: Any
+    rnn_axes: Any
+    ff_axes: Any
+    vocab_axes: Any
+    mlstm_dh_axes: Any = None
+
+    def rules(self) -> dict[str, Any]:
+        """Logical-axis rules for ``pspec.axis_rules`` (activations)."""
+        return {
+            "batch": self.batch_axes,
+            "seq": None,
+            "kv_seq": self.kv_seq_axes,
+            "heads": self.heads_axes,
+            "kv_heads": self.kv_heads_axes,
+            "ff": self.ff_axes,
+            "vocab": self.vocab_axes,
+            "experts": self.expert_axes,
+            "expert_cap": self.batch_axes,
+            "expert_ff": self.expert_ff_axes,
+            "tokens": self.batch_axes,
+            "rnn": self.rnn_axes,
+            "mlstm_dh": self.mlstm_dh_axes,
+            # sequence-parallel activation sharding at remat boundaries: the
+            # saved (L, B, S, d) residual stack shards its seq dim over the
+            # tensor-parallel axis (Megatron-SP style); blocks gather on
+            # entry.  Disabled automatically for S=1 decode (dim < axis).
+            "act_seq": self.tp_axis if self.batch_axes else None,
+            # MoE einsum-dispatch token groups: batch axes + the TP axis.
+            # (Dropping "pod" here was tried and REFUTED: wire rose 6x to
+            # 56 TB/chip — pod-local groups force the dispatch contraction
+            # to re-gather tokens across pods.  EXPERIMENTS.md SPerf.)
+            "moe_groups": (tuple(self.batch_axes) + (self.tp_axis,)
+                           if self.batch_axes and self.tp_axis
+                           else self.batch_axes),
+        }
+
+
+def make_plan(cfg: ModelConfig, mesh: Mesh, *, global_batch: int,
+              kv_shard: str = "auto", kind: str = "train",
+              fsdp_decode: bool = False) -> ShardingPlan:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    data = sizes.get("data", 1)
+    pod = sizes.get("pod", 1)
+
+    batch_axes: tuple[str, ...] | None
+    if global_batch % (pod * data) == 0 and global_batch >= pod * data:
+        batch_axes = ("pod", "data") if pod > 1 else ("data",)
+    elif pod > 1 and global_batch % pod == 0:
+        batch_axes = ("pod",)
+    else:
+        batch_axes = None                      # single-stream decode
+
+    fsdp: tuple[str, ...] | None = ("data",) if batch_axes else None
+    if kind in ("decode", "long_decode") and not fsdp_decode:
+        # Inference has no optimizer state: FSDP-sharded weights would be
+        # all-gathered per layer *per token* (measured 7.2 GB wire/step on
+        # command-r decode).  Keep weights TP-sharded only; the footprint
+        # cost is params_bf16/model_axis per chip (SPerf Cell A iter 3).
+        fsdp = None
+    joint = ("data", "model") if batch_axes is None else None
+
+    def div(n: int, axis_size: int):
+        return n > 0 and n % axis_size == 0
+
+    def div_pad(n: int, axis_size: int):
+        # uneven sharding (GSPMD pads) — fine when the dim >= axis
+        return n >= axis_size
+
+    heads = "model" if div_pad(cfg.n_heads, model) else None
+    kv_heads = "model" if div(cfg.n_kv_heads, model) else None
+    if kv_shard == "heads" and kv_heads is None:
+        raise ValueError("kv heads not divisible by model axis")
+    kv_seq = None
+    if kv_heads is None or kv_shard == "seq":
+        kv_heads = None
+        kv_seq = "model"
+
+    experts = "model" if div(cfg.n_experts, model) else None
+    expert_ff = None if experts else ("model" if div(cfg.d_ff, model) else None)
+
+    rnn = (joint if joint and div(cfg.rnn_width, data * model)
+           else ("model" if div(cfg.rnn_width, model) else None))
+    # effective FFN width: mLSTM blocks (d_ff == 0) use the up-projection
+    ff_width = cfg.d_ff if cfg.d_ff > 0 else int(cfg.d_model * cfg.mlstm_proj_factor)
+    ff = (joint if joint and div(ff_width, data * model)
+          else ("model" if div(ff_width, model) else None))
+    mlstm_dh = ff_width // max(1, cfg.n_heads)
+    mlstm_dh_axes = "model" if div(mlstm_dh, model) else None
+    vocab = (joint if joint and div(cfg.padded_vocab, data * model)
+             else ("model" if div(cfg.padded_vocab, model) else None))
+
+    return ShardingPlan(
+        batch_axes=batch_axes,
+        fsdp_axes=fsdp,
+        tp_axis="model" if model > 1 else None,
+        heads_axes=heads,
+        kv_heads_axes=kv_heads,
+        kv_seq_axes=kv_seq,
+        expert_axes=experts,
+        expert_ff_axes=expert_ff,
+        rnn_axes=rnn,
+        ff_axes=ff,
+        vocab_axes=vocab,
+        mlstm_dh_axes=mlstm_dh_axes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (path-pattern based)
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: str, shape: tuple[int, ...], plan: ShardingPlan,
+                mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    f = plan.fsdp_axes
+    t = plan.tp_axis
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fits(spec: P) -> P:
+        """Drop axis assignments larger than the dimension (uneven sharding
+        with padding is allowed and GSPMD-handled when dim >= axis size)."""
+        out = []
+        for dim, s in zip(shape, spec + (None,) * (len(shape) - len(spec))):
+            if s is None:
+                out.append(None)
+                continue
+            ax = (s,) if isinstance(s, str) else tuple(s)
+            n = 1
+            for a in ax:
+                n *= sizes.get(a, 1)
+            out.append(s if dim % n == 0 else None)
+        return P(*out)
+
+    stacked = path.startswith("groups/")
+    def st(spec: P) -> P:
+        return fits(P(None, *spec) if stacked else spec)
+
+    p = path
+    if re.search(r"embed$", p):
+        return fits(P(plan.vocab_axes, f))
+    if re.search(r"head/w$", p):
+        return st(P(f, plan.vocab_axes))
+    if re.search(r"frontend/w$", p):
+        return fits(P(None, t))
+    if re.search(r"attn/w[qkv]/w$", p):
+        which = p[-4]
+        ax = plan.heads_axes if which == "q" else plan.kv_heads_axes
+        return st(P(f, ax))
+    if re.search(r"attn/w[qkv]/b$", p):
+        which = p[-4]
+        ax = plan.heads_axes if which == "q" else plan.kv_heads_axes
+        return st(P(ax))
+    if re.search(r"attn/wo/w$", p):
+        return st(P(plan.heads_axes, f))
+    if re.search(r"mo e?/router/w$", p) or re.search(r"moe/router/w$", p):
+        return st(P(f, None))
+    if re.search(r"moe/w[ig]$", p):
+        return st(P(plan.expert_axes, f, plan.expert_ff_axes))
+    if re.search(r"moe/wo$", p):
+        return st(P(plan.expert_axes, plan.expert_ff_axes, f))
+    if re.search(r"(mlp|ffn)/w[ig]/w$", p):
+        return st(P(f, plan.ff_axes))
+    if re.search(r"(mlp|ffn)/wo/w$", p):
+        return st(P(plan.ff_axes, f))
+    if re.search(r"rec/(wx|wgate)/w$", p):
+        return st(P(f, plan.rnn_axes))
+    if re.search(r"rec/wo/w$", p):
+        return st(P(plan.rnn_axes, f))
+    if re.search(r"rec/conv$", p) or re.search(r"rec/gate_[ri]$", p):
+        return st(P(None, plan.rnn_axes))
+    if re.search(r"rec/lam$", p):
+        return st(P(plan.rnn_axes))
+    if re.search(r"cell/(up|up_gate)/w$", p):
+        return st(P(f, plan.ff_axes))
+    if re.search(r"cell/down/w$", p):
+        return st(P(None, plan.mlstm_dh_axes, f))
+    if re.search(r"cell/w[qkv]$", p):          # mLSTM per-head maps
+        return st(P(None, f, None))
+    if re.search(r"cell/wif/w$", p):
+        return st(P(f, None))
+    if re.search(r"cell/w/w$", p):             # sLSTM gate projection
+        return st(P(f, plan.rnn_axes))
+    if re.search(r"cell/r$", p):               # sLSTM diagonal recurrence
+        return st(P(None, plan.rnn_axes))
+    if re.search(r"cell/b$", p):
+        return st(P(None))
+    if re.search(r"cell/conv$", p):
+        return st(P(None, None))
+    # norms, scalars, biases: replicate
+    return st(P())
+
+
+def _tree_paths(tree: Any, prefix: str = "") -> Any:
+    """Mirror pytree with 'a/b/c' path strings at the leaves."""
+    if isinstance(tree, dict):
+        return {k: _tree_paths(v, f"{prefix}{k}/") for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [_tree_paths(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+        return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
+    return prefix[:-1]
+
+
+def param_shardings(params_shape: Any, plan: ShardingPlan, mesh: Mesh) -> Any:
+    """NamedSharding pytree for a params (or optimizer-moment) pytree of
+    ShapeDtypeStructs / arrays."""
+    paths = _tree_paths(params_shape)
+
+    def one(path: str, leaf) -> NamedSharding:
+        # strip the leading container ("groups/", "rest/0/") for matching but
+        # keep stacking awareness
+        spec = _param_spec(_norm_path(path), leaf.shape, plan, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, paths, params_shape)
+
+
+def _norm_path(path: str) -> str:
+    # groups/bN/... keeps 'groups/' marker; rest/N/... drops it
+    p = re.sub(r"^rest/\d+/", "", path)
+    p = re.sub(r"^groups/b\d+/", "groups/", p)
+    p = re.sub(r"/b\d+/", "/", p)
+    return p
+
+
+def opt_state_shardings(opt_shape: Any, params_plan: Any, mesh: Mesh,
+                        plan: ShardingPlan) -> Any:
+    """Moments shard exactly like their parameters; step is replicated."""
+    m = param_shardings(opt_shape["m"], plan, mesh)
+    v = param_shardings(opt_shape["v"], plan, mesh)
+    return {"step": NamedSharding(mesh, P()), "m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shape: Any, plan: ShardingPlan, mesh: Mesh) -> Any:
+    b = plan.batch_axes
+
+    def one(leaf):
+        spec = [b] + [None] * (len(leaf.shape) - 1)
+        if b is not None:
+            n = 1
+            for a in b:
+                n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+            if leaf.shape[0] % n != 0:
+                spec[0] = None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, plan: ShardingPlan, mesh: Mesh,
+                    cfg: ModelConfig) -> Any:
+    """KV caches: (R?, B, S, Hkv, D) -> batch + (kv_heads | kv_seq) sharding;
+    recurrent states: (R?, B, ...) -> batch + channel sharding."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_fits(ax, dim):
+        if ax is None:
+            return None
+        n = 1
+        for a in ((ax,) if isinstance(ax, str) else ax):
+            n *= sizes.get(a, 1)
+        return ax if dim % n == 0 else None
+
+    def one(path, leaf):
+        shape = leaf.shape
+        stacked = path.startswith("groups/")
+        dims = list(shape[1:]) if stacked else list(shape)
+        spec: list[Any] = []
+        if len(dims) == 4:                       # (B, S, Hkv, D) attention
+            spec = [axis_fits(plan.batch_axes, dims[0]),
+                    axis_fits(plan.kv_seq_axes, dims[1]),
+                    axis_fits(plan.kv_heads_axes, dims[2]), None]
+        elif len(dims) >= 2:                     # recurrent states
+            spec = [axis_fits(plan.batch_axes, dims[0])]
+            spec += [None] * (len(dims) - 2)
+            spec.append(axis_fits(plan.rnn_axes if plan.rnn_axes else None,
+                                  dims[-1]))
+        else:
+            spec = [None] * len(dims)
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    paths = _tree_paths(cache_shape)
+    return jax.tree.map(one, paths, cache_shape)

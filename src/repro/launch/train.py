@@ -1,0 +1,118 @@
+"""Training driver: data -> step -> checkpoint, with fault tolerance wired.
+
+Runs at any scale: the production pod meshes (on real TPUs), or a local
+host mesh for the examples/tests (``--local``).  Features exercised here and
+covered by tests:
+
+* auto-resume from the latest atomic checkpoint (restart-safe data by step);
+* SIGTERM preemption -> checkpoint -> clean exit;
+* straggler watchdog on per-step wall times;
+* async checkpointing off the training thread;
+* optimizer-state dtype + gradient compression knobs (TrainConfig).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, list_archs, reduced_config
+from repro.configs.shapes import ShapeSpec
+from repro.data import make_dataset
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import BuiltStep, TrainConfig, build_step
+from repro.models import transformer as TF
+from repro.optim import OptimizerConfig, adamw_init
+from repro.runtime import PreemptionHandler, StepWatchdog
+
+
+def train_loop(cfg, built: BuiltStep, tcfg: TrainConfig, *,
+               steps: int, ckpt_dir: str, data_cfg: DataConfig,
+               ckpt_every: int = 50, log_every: int = 10,
+               data_path: str | None = None,
+               preemption: PreemptionHandler | None = None) -> dict:
+    """Returns final metrics dict (used by tests and examples)."""
+    ckpt = CheckpointManager(ckpt_dir)
+    watchdog = StepWatchdog()
+    preemption = preemption or PreemptionHandler().install()
+    dataset = make_dataset(cfg, data_cfg, data_path)
+
+    params = jax.jit(lambda: TF.init_params(jax.random.PRNGKey(0), cfg),
+                     out_shardings=built.in_shardings[0])()
+    opt_state = jax.jit(lambda: adamw_init(params, tcfg.optimizer),
+                        out_shardings=built.in_shardings[1])()
+    start_step = 0
+    if ckpt.latest_step() is not None:
+        (params, opt_state), start_step = ckpt.restore(
+            (params, opt_state),
+            shardings=(built.in_shardings[0], built.in_shardings[1]))
+        print(f"[train] resumed from step {start_step}")
+
+    metrics = {}
+    step = start_step
+    for step in range(start_step, steps):
+        watchdog.start_step(step)
+        batch = dataset.get_batch(step)
+        params, opt_state, metrics = built.fn(params, opt_state, batch)
+        dt = watchdog.end_step()
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            print(f"[train] step {step} loss {m.get('loss', float('nan')):.4f} "
+                  f"({dt*1e3:.0f} ms)", flush=True)
+        if (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state), blocking=False)
+        if preemption.should_stop:
+            print(f"[train] preempted at step {step}; checkpointing")
+            break
+    ckpt.save(step + 1, (params, opt_state), blocking=True)
+    ckpt.wait()
+    return {k: float(np.asarray(v)) for k, v in metrics.items()} | {
+        "final_step": step + 1,
+        "median_step_s": watchdog.median_step_time,
+        "stragglers": len(watchdog.straggler_steps),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--local", action="store_true",
+                    help="host mesh + reduced config (CPU-runnable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--opt-state-dtype", default="float32")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", default=None, help="memmap token file")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = reduced_config(cfg)
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                  warmup_steps=max(1, args.steps // 20),
+                                  state_dtype=args.opt_state_dtype),
+        grad_compression=args.grad_compression)
+    shape = ShapeSpec("cli", args.seq_len, args.batch, "train")
+    built = build_step(cfg, shape, mesh, tcfg)
+    data_cfg = DataConfig(seq_len=args.seq_len, batch_size=args.batch)
+    out = train_loop(cfg, built, tcfg, steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, data_cfg=data_cfg,
+                     data_path=args.data)
+    print("[train] done:", out)
+
+
+if __name__ == "__main__":
+    main()

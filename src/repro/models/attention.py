@@ -1,0 +1,147 @@
+"""GQA attention block: projections, RoPE, cache handling, sharding tags."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.pspec import rule_axis_size, shard
+
+
+def _maybe_repeat_kv(cfg: ModelConfig, k: jax.Array, v: jax.Array):
+    """Expand grouped KV to full query heads when the KV-head count cannot
+    shard over the tensor-parallel axis.
+
+    Rationale: GSPMD cannot propagate a 16-way head sharding through the
+    (Hkv, G) grouping reshape when Hkv doesn't divide the axis — it gives up
+    and replicates the whole attention computation (measured 80+ GB/chip).
+    Repeating K/V to Hq heads keeps a clean per-head sharding; the repeated
+    tensor is itself head-sharded, so per-chip KV bytes stay constant."""
+    model = rule_axis_size("heads")
+    if model > 1 and cfg.n_kv_heads % model != 0 and cfg.n_heads % model == 0:
+        g = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = shard(k, "batch", "seq", "heads", None)
+        v = shard(v, "batch", "seq", "heads", None)
+    return k, v
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": {"w": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, pd)},
+        "wk": {"w": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, pd)},
+        "wv": {"w": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, pd)},
+        "wo": {"w": L.dense_init(ks[3], cfg.q_dim, cfg.d_model, pd)},
+    }
+    if cfg.qkv_bias:
+        p["wq"]["b"] = jnp.zeros((cfg.q_dim,), pd)
+        p["wk"]["b"] = jnp.zeros((cfg.kv_dim,), pd)
+        p["wv"]["b"] = jnp.zeros((cfg.kv_dim,), pd)
+    if cfg.o_bias:
+        p["wo"]["b"] = jnp.zeros((cfg.d_model,), pd)
+    if cfg.use_qk_norm:
+        p["q_norm"] = L.norm_params(cfg.head_dim, "rmsnorm")
+        p["k_norm"] = L.norm_params(cfg.head_dim, "rmsnorm")
+    return p
+
+
+def _qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.use_qk_norm:
+        q = L.apply_norm(p["q_norm"], q, "rmsnorm")
+        k = L.apply_norm(p["k_norm"], k, "rmsnorm")
+    if cfg.is_decoder or cfg.frontend != "audio":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def forward(p: dict, cfg: ModelConfig, x: jax.Array, *,
+            local: bool = False) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    k, v = _maybe_repeat_kv(cfg, k, v)
+    head_axis = "heads" if k.shape[2] == cfg.n_heads else "kv_heads"
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import mha
+        out = mha(q, k, v, causal=cfg.is_decoder,
+                  window=cfg.local_window if local else None,
+                  softcap=cfg.logit_softcap,
+                  block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    else:
+        out = L.blocked_attention(
+            q, k, v,
+            causal=cfg.is_decoder,
+            window=cfg.local_window if local else None,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            softcap=cfg.logit_softcap,
+            head_axis=head_axis,
+        )
+    out = shard(out, "batch", "seq", "heads", None)
+    return L.dense(p["wo"], out.reshape(B, S, cfg.q_dim))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               local: bool = False) -> dict:
+    """KV cache for one attention layer.  Local layers keep a ring buffer of
+    ``local_window`` positions; full layers keep ``max_len``."""
+    length = min(cfg.local_window, max_len) if local else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+    }
+
+
+def decode_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                index: jax.Array, *, local: bool = False
+                ) -> tuple[jax.Array, dict]:
+    """One-token decode: update cache at ``index``, attend over the cache.
+
+    The cache read is the memory-bound hot loop this framework's analytical
+    model is about — every step streams the full (B, S, Hkv, D) cache.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    positions = jnp.full((B, 1), index, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    length = cache["k"].shape[1]
+    slot = jnp.where(jnp.asarray(local), index % length, index)
+    cache_dt = cache["k"].dtype
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache_dt),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache_dt),
+                                      (0, slot, 0, 0))
+    ck = shard(ck, "batch", "kv_seq", "kv_heads", None)
+    cv = shard(cv, "batch", "kv_seq", "kv_heads", None)
+    kv_len = jnp.minimum(index + 1, length) if local else index + 1
+    # the cache is *stored* (and streamed from HBM) in kv_cache_dtype; the
+    # attention math upcasts at use (fp8 KV-quant halves the decode traffic)
+    ck_c = ck.astype(q.dtype)
+    cv_c = cv.astype(q.dtype)
+    if cfg.use_pallas:
+        # ring buffer: every slot older than `window` has been overwritten;
+        # all valid slots attend (causality holds by construction).
+        from repro.kernels.decode_attention.ops import gqa_decode
+        out = gqa_decode(q, ck_c, cv_c, kv_len, softcap=cfg.logit_softcap)
+    else:
+        out = L.dense_attention(q, ck_c, cv_c, causal=False, kv_len=kv_len,
+                                softcap=cfg.logit_softcap)
+    out = shard(out, "batch", None, "heads", None)
+    y = L.dense(p["wo"], out.reshape(B, 1, cfg.q_dim))
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,39 @@
+"""Dense MLP (GLU or plain two-layer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.pspec import shard
+
+
+def init(key, cfg: ModelConfig, *, d_in: int | None = None,
+         d_ff: int | None = None) -> dict:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": {"w": L.dense_init(ks[0], d, f, pd)},
+        "wo": {"w": L.dense_init(ks[2], f, d, pd)},
+    }
+    if cfg.glu:
+        p["wg"] = {"w": L.dense_init(ks[1], d, f, pd)}
+    if cfg.mlp_bias:
+        p["wi"]["b"] = jnp.zeros((f,), pd)
+        p["wo"]["b"] = jnp.zeros((d,), pd)
+        if cfg.glu:
+            p["wg"]["b"] = jnp.zeros((f,), pd)
+    return p
+
+
+def forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = L.dense(p["wi"], x)
+    if cfg.glu:
+        h = L.activate(L.dense(p["wg"], x), cfg.act) * h
+    else:
+        h = L.activate(h, cfg.act)
+    h = shard(h, "batch", "seq", "ff")
+    return L.dense(p["wo"], h)

@@ -1,0 +1,195 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded, sort-based
+dispatch (static shapes, SPMD-friendly).
+
+The dispatch/combine are *data-dependent gathers/scatters* — the TPU
+analogue of the paper's Write-ACK LSU class (DESIGN.md S2) and one of the
+three hillclimb cells.
+
+Sharding is tagged with MoE-specific logical axes so the launcher can choose
+expert parallelism (experts -> "model", used when n_experts divides the model
+axis) or tensor parallelism inside experts (expert_ff -> "model", used for
+few-expert models like grok-1).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.pspec import shard
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = math.ceil(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+                  / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # pad to a multiple of 8
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    lim = 1.0 / math.sqrt(d)
+    return {
+        "router": {"w": jax.random.normal(ks[0], (d, E), pd) * 0.02},
+        "wi": jax.random.normal(ks[1], (E, d, f), pd) * lim,
+        "wg": jax.random.normal(ks[2], (E, d, f), pd) * lim,
+        "wo": jax.random.normal(ks[3], (E, f, d), pd) / math.sqrt(f),
+    }
+
+
+def forward(p: dict, cfg: ModelConfig, x: jax.Array,
+            decode: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux load-balance loss (scalar)).
+
+    Dispatch implementation is selected by ``cfg.moe_impl``; decode steps
+    default to the sort path regardless (SPerf Cell B: the einsum one-hots
+    are sized for training token counts — at 128 decode tokens they cost
+    4.15x in step time).
+
+    Dispatch implementations:
+
+    * ``einsum`` (default) — grouped one-hot dispatch/combine matmuls
+      (GShard/MaxText style).  Under GSPMD the token->expert resharding is
+      expressed as *contractions*, which the partitioner turns into
+      reduce-scatters on the expert axis; the data-dependent form below
+      would instead force a full all-gather of the token array (measured
+      17 GB/chip on qwen3-235b).
+    * ``sort``   — capacity assignment via argsort + gathers (the ragged
+      form a custom TPU kernel would use; kept for single-chip use and as
+      the comparison point in EXPERIMENTS.md SPerf).
+    """
+    impl = getattr(cfg, "moe_impl", "einsum")
+    if decode and impl == "einsum":
+        impl = "sort"
+    if impl == "einsum":
+        return forward_einsum(p, cfg, x)
+    return forward_sort(p, cfg, x)
+
+
+def _router(p: dict, cfg: ModelConfig, xt: jax.Array):
+    """Shared routing: probs, top-k weights/experts, aux loss.  xt: (..., d)."""
+    logits = xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    density = jnp.mean(
+        jax.nn.one_hot(experts[..., 0], cfg.n_experts, dtype=jnp.float32),
+        axis=tuple(range(experts.ndim - 1)))
+    density_prob = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = cfg.n_experts * jnp.sum(density * density_prob)
+    return probs, weights, experts, aux
+
+
+def forward_einsum(p: dict, cfg: ModelConfig, x: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Grouped one-hot einsum dispatch (SPMD-native)."""
+    B, S, d = x.shape
+    k = cfg.experts_per_token
+    E = cfg.n_experts
+    T = B * S
+    sg = min(2048, S) if S > 1 else 1
+    while T % sg:
+        sg //= 2
+    g = T // sg
+    C = capacity(cfg, sg)
+
+    xg = x.reshape(g, sg, d)
+    xg = shard(xg, "moe_groups", None, None)
+    probs, weights, experts, aux = _router(p, cfg, xg)   # (g,sg,k)
+
+    # capacity assignment: earlier tokens and lower k-slots have priority
+    counts = jnp.zeros((g, E), jnp.int32)
+    combine = jnp.zeros((g, sg, E, C), x.dtype)
+    for j in range(k):
+        m_j = jax.nn.one_hot(experts[..., j], E, dtype=jnp.int32)  # (g,sg,E)
+        pos_j = counts[:, None, :] + jnp.cumsum(m_j, axis=1) - m_j
+        keep_j = (pos_j < C) & (m_j > 0)
+        oh_c = jax.nn.one_hot(jnp.where(keep_j, pos_j, C), C, dtype=x.dtype)
+        w_j = weights[..., j][..., None, None]               # (g,sg,1,1)
+        combine = combine + oh_c * (w_j * keep_j[..., None]).astype(x.dtype)
+        counts = counts + m_j.sum(axis=1)
+    combine = shard(combine, "moe_groups", None, None, None)
+
+    # dispatch / expert FFN / combine — contractions only
+    dispatch_mask = (combine != 0).astype(x.dtype)
+    dispatch = jnp.einsum("gsec,gsd->gecd", dispatch_mask, xg)   # (g,E,C,d)
+    dispatch = shard(dispatch, "batch", "experts", None, None)
+    wi = p["wi"].astype(x.dtype)
+    wg = p["wg"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    h = jnp.einsum("gecd,edf->gecf", dispatch, wi)
+    a = jnp.einsum("gecd,edf->gecf", dispatch, wg)
+    h = L.activate(a, cfg.act) * h
+    h = shard(h, "batch", "experts", None, "expert_ff")
+    y = jnp.einsum("gecf,efd->gecd", h, wo)                      # (g,E,C,d)
+    y = shard(y, "batch", "experts", None, None)
+    out = jnp.einsum("gecd,gsec->gsd", y, combine)
+    out = shard(out, "moe_groups", None, None)
+    return out.reshape(B, S, d), aux
+
+
+def forward_sort(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort/gather-based dispatch (single-chip & kernel-oriented path)."""
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.experts_per_token
+    E = cfg.n_experts
+    C = capacity(cfg, T)
+    xt = x.reshape(T, d)
+
+    # --- routing (f32 for stability) ---
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    weights, experts = jax.lax.top_k(probs, k)                 # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(experts[:, 0], E, dtype=jnp.float32), 0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * density_prob)
+
+    # --- capacity assignment via sort (position of each request within its
+    #     expert; requests beyond capacity C are dropped) ---
+    flat_e = experts.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)                    # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < C
+    token_id = (jnp.arange(T * k, dtype=jnp.int32) // k)
+
+    # --- dispatch: src[e, c] = source token (sentinel T when empty) ---
+    src = jnp.full((E, C), T, jnp.int32)
+    src = src.at[flat_e, jnp.where(keep, pos, C)].set(
+        jnp.where(keep, token_id, T), mode="drop")
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    dispatch = xpad[src]                                       # (E, C, d) gather
+    dispatch = shard(dispatch, "experts", "expert_cap", None)
+
+    # --- expert FFN (einsum batched over experts) ---
+    wi = p["wi"].astype(x.dtype)
+    wg = p["wg"].astype(x.dtype)
+    wo = p["wo"].astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", dispatch, wi)
+    g = jnp.einsum("ecd,edf->ecf", dispatch, wg)
+    h = L.activate(g, cfg.act) * h
+    h = shard(h, "experts", "expert_cap", "expert_ff")
+    y = jnp.einsum("ecf,efd->ecd", h, wo)                      # (E, C, d)
+    y = shard(y, "experts", "expert_cap", None)
+
+    # --- combine: weighted gather back to token order ---
+    out = jnp.zeros((T, d), x.dtype)
+    pos_t = pos.reshape(T, k)
+    keep_t = keep.reshape(T, k)
+    for j in range(k):
+        rows = y[experts[:, j], jnp.where(keep_t[:, j], pos_t[:, j], 0)]
+        rows = shard(rows, "tokens", None)
+        w_j = (weights[:, j] * keep_t[:, j]).astype(x.dtype)
+        out = out + rows * w_j[:, None]
+    return out.reshape(B, S, d), aux

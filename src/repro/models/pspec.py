@@ -1,0 +1,86 @@
+"""Logical-axis sharding annotations for model code.
+
+Model code tags activations with *logical* axis names; the launcher installs
+a rules table mapping logical names to mesh axes.  Outside a mesh context the
+helpers are no-ops, so the same model code runs in single-device tests and in
+the 512-chip dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _rules() -> dict[str, tuple[str, ...] | str | None]:
+    return getattr(_STATE, "rules", None) or {}
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, rules: dict[str, tuple[str, ...] | str | None]):
+    """Install logical->mesh axis rules for the enclosed region."""
+    prev = (getattr(_STATE, "mesh", None), getattr(_STATE, "rules", None))
+    _STATE.mesh, _STATE.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def logical_to_spec(names: Sequence[str | None]) -> P:
+    rules = _rules()
+    spec = []
+    for n in names:
+        if n is None:
+            spec.append(None)
+        else:
+            spec.append(rules.get(n))
+    return P(*spec)
+
+
+def shard(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op without mesh)."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    if x.ndim != len(names):
+        raise ValueError(f"rank {x.ndim} vs {len(names)} logical names")
+    spec = logical_to_spec(names)
+    # Keep the assignment when the dim is at least the axis size (GSPMD
+    # shards unevenly with padding — e.g. a 92553 vocab over 16 chips); drop
+    # it only when the dim is *smaller* than the axis (degenerate padding).
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            fixed.append(None)
+            continue
+        n = 1
+        for a in ((s,) if isinstance(s, str) else s):
+            n *= sizes.get(a, 1)
+        fixed.append(s if dim >= n else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def rule_axis_size(name: str) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 without mesh)."""
+    mesh = _mesh()
+    if mesh is None:
+        return 1
+    r = _rules().get(name)
+    if r is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in ((r,) if isinstance(r, str) else r):
+        n *= sizes.get(a, 1)
+    return n

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block:  x -> [in-proj -> causal conv(4) -> RG-LRU] * gelu(gate-proj) -> out-proj
+
+RG-LRU cell (Griffin Eq. 1-4, diagonal gates):
+    r_t = sigmoid(w_r * x_t + b_r)                    recurrence gate
+    i_t = sigmoid(w_i * x_t + b_i)                    input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))          per-channel decay
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (log-depth);
+decode is the O(1) per-token update.  The temporal conv is realized as four
+shifted adds (TPU-friendly; no convolution op), with the last three inputs
+carried as decode state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.pspec import shard
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    w = cfg.rnn_width
+    ks = jax.random.split(key, 5)
+    # Lambda init so that a^c in ~(0.9, 0.999) (Griffin A.2)
+    lam = jax.random.uniform(ks[4], (w,), pd, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(jnp.exp(jnp.log(-jnp.log(lam)) / _C)))  # softplus^-1
+    return {
+        "wx": {"w": L.dense_init(ks[0], cfg.d_model, w, pd)},
+        "wgate": {"w": L.dense_init(ks[1], cfg.d_model, w, pd)},
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, w), pd) / math.sqrt(cfg.conv_width),
+        "gate_r": jnp.zeros((2, w), pd),   # [w_r, b_r] diagonal
+        "gate_i": jnp.zeros((2, w), pd),
+        "lam": lam,
+        "wo": {"w": L.dense_init(ks[3], w, cfg.d_model, pd)},
+    }
+
+
+def _decay_and_input(p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-step (a_t, b_t) of the affine recurrence h = a*h + b.  f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["gate_r"][0] + p["gate_r"][1])
+    i = jax.nn.sigmoid(xf * p["gate_i"][0] + p["gate_i"][1])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xf)
+    return a, b
+
+
+def _conv(p: dict, x: jax.Array, state: jax.Array | None = None):
+    """Causal temporal conv of width W as shifted adds.
+
+    x: (B, S, w).  ``state``: (B, W-1, w) trailing inputs from the previous
+    call (decode); returns (y, new_state)."""
+    W = p["conv"].shape[0]
+    kern = p["conv"].astype(x.dtype)
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)         # (B, W-1+S, w)
+    y = jnp.zeros_like(x)
+    S = x.shape[1]
+    for j in range(W):
+        y = y + xx[:, j:j + S, :] * kern[W - 1 - j]
+    new_state = xx[:, -(W - 1):, :]
+    return y, new_state
+
+
+def forward(p: dict, cfg: ModelConfig, x: jax.Array,
+            h0: jax.Array | None = None) -> jax.Array:
+    """Full-sequence block forward (training / prefill).  x: (B, S, d)."""
+    B, S, _ = x.shape
+    u = L.dense(p["wx"], x)
+    gate = jax.nn.gelu(L.dense(p["wgate"], x))
+    u, _ = _conv(p, u)
+    u = shard(u, "batch", "seq", "rnn")
+    a, b = _decay_and_input(p, u)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    if cfg.use_pallas:
+        from repro.kernels.rglru.ops import scan as rglru_kernel_scan
+        h = rglru_kernel_scan(a, b).astype(jnp.float32)
+    else:
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype) * gate
+    h = shard(h, "batch", "seq", "rnn")
+    return L.dense(p["wo"], h)
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.bfloat16),
+    }
+
+
+def decode_step(p: dict, cfg: ModelConfig, x: jax.Array, state: dict
+                ) -> tuple[jax.Array, dict]:
+    """One-token update.  x: (B, 1, d)."""
+    u = L.dense(p["wx"], x)
+    gate = jax.nn.gelu(L.dense(p["wgate"], x))
+    u, conv_state = _conv(p, u, state["conv"].astype(u.dtype))
+    a, b = _decay_and_input(p, u)
+    h = a[:, 0] * state["h"] + b[:, 0]                # (B, w) f32
+    out = h.astype(x.dtype)[:, None, :] * gate
+    return L.dense(p["wo"], out), {"h": h, "conv": conv_state}

@@ -1,0 +1,302 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM — linear matrix-memory recurrence per head:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (d_k x d_v matrix state)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+
+Training runs the **chunkwise-parallel** form: the sequence is split into
+chunks of ``cfg.chunk_size``; within a chunk the contribution is an
+attention-like masked matmul with cumulative log-decay weights, across chunks
+the (C, n) state is carried by a ``lax.scan``.  Gating uses
+``f_t = sigmoid(f̃_t)`` / ``i_t = sigmoid(ĩ_t)`` (the log-space cumulative
+decays are then always <= 0, so the chunked form is overflow-free; the
+original exp-input-gating with running max stabilizer is a documented
+simplification — see DESIGN.md).  A strictly sequential reference
+(`mlstm_sequential`) validates the chunked form in tests and serves decode.
+
+sLSTM — scalar memory with exponential gating and normalizer state; its
+recurrence reads h_{t-1} into the gates, so it is inherently sequential and
+runs as a ``lax.scan`` over time (the TPU adaptation note in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.pspec import shard
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_in = int(d * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    dh = d_in // H
+    ks = jax.random.split(key, 8)
+    lim = 1.0 / math.sqrt(dh)
+    return {
+        "up": {"w": L.dense_init(ks[0], d, d_in, pd)},
+        "up_gate": {"w": L.dense_init(ks[1], d, d_in, pd)},
+        # per-head q,k,v maps (dh x dh), applied within heads
+        "wq": jax.random.normal(ks[2], (H, dh, dh), pd) * lim,
+        "wk": jax.random.normal(ks[3], (H, dh, dh), pd) * lim,
+        "wv": jax.random.normal(ks[4], (H, dh, dh), pd) * lim,
+        # scalar i/f gates per head from the block input
+        "wif": {"w": L.dense_init(ks[5], d, 2 * H, pd)},
+        "ln_heads": L.norm_params(dh, "rmsnorm"),
+        # head-split (H, dh, d) layout: the down-projection contracts in
+        # split form, so the dh-sharded heads never flatten (the flatten
+        # all-gathered 25.8 GB x 48 on the 32k prefill — SPerf Cell C)
+        "down": {"w": L.dense_init(ks[6], d_in, d, pd).reshape(H, dh, d)},
+    }
+
+
+def _mlstm_qkvif(p: dict, cfg: ModelConfig, x: jax.Array):
+    """Project block input to per-head q,k,v and scalar gate logits.
+
+    Sharding: the head count is small (4), so heads stay replicated and the
+    *head feature* dim ``dh`` carries the tensor-parallel axis ("ff" rule).
+    q/k are kept replicated over dh (they contract against the sharded
+    matrix-memory state); v and the state's value dim shard over "ff"."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    u = L.dense(p["up"], x)                       # (B,S,d_in)
+    gate = jax.nn.silu(L.dense(p["up_gate"], x))
+    dh = u.shape[-1] // H
+    uh = u.reshape(B, S, H, dh)
+    uh = shard(uh, "batch", "seq", None, "mlstm_dh")
+    q = jnp.einsum("bshd,hde->bshe", uh, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bshd,hde->bshe", uh, p["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", uh, p["wv"].astype(x.dtype))
+    q = shard(q, "batch", "seq", None, None)      # replicated dh
+    k = shard(k, "batch", "seq", None, None)
+    v = shard(v, "batch", "seq", None, "mlstm_dh")  # sharded value dim
+    gates = L.dense(p["wif"], x).astype(jnp.float32)      # (B,S,2H)
+    li = jax.nn.log_sigmoid(gates[..., :H])               # log i_t  (<= 0)
+    lf = jax.nn.log_sigmoid(gates[..., H:])               # log f_t  (<= 0)
+    return q, k, v, li, lf, gate
+
+
+def mlstm_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Chunkwise-parallel full-sequence mLSTM.  x: (B,S,d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    q, k, v, li, lf, gate = _mlstm_qkvif(p, cfg, x)
+    dh = q.shape[-1]
+    if cfg.use_pallas:
+        from repro.kernels.mlstm_chunk.ops import chunked_mlstm
+        h = chunked_mlstm(q, k, v, li, lf, chunk=cfg.chunk_size)
+        h = L.apply_norm(p["ln_heads"], h, "rmsnorm")
+        h = h * gate.reshape(B, S, H, dh)
+        h = shard(h, "batch", "seq", None, "mlstm_dh")
+        return jnp.einsum("bshd,hde->bse", h, p["down"]["w"].astype(x.dtype))
+    c = min(cfg.chunk_size, S)
+    assert S % c == 0, (S, c)
+    n_chunks = S // c
+
+    def to_chunks(a):
+        return a.reshape(B, n_chunks, c, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = map(to_chunks, (q, k, v))        # (n, B, c, H, dh)
+    lic, lfc = map(to_chunks, (li, lf))           # (n, B, c, H)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+
+    def chunk_step(carry, inp):
+        C, n = carry
+        qb, kb, vb, lib, lfb = inp                # (B,c,H,dh), (B,c,H)
+        vb = shard(vb, "batch", None, None, "mlstm_dh")
+        cum = jnp.cumsum(lfb, axis=1)             # (B,c,H)  log decay since chunk start
+        total = cum[:, -1]                        # (B,H)
+        # inter-chunk: state contribution decayed to each position
+        qbf = qb.astype(jnp.float32)
+        inter = jnp.einsum("bchd,bhde->bche", qbf * jnp.exp(cum)[..., None], C)
+        n_inter = jnp.einsum("bchd,bhd->bch", qbf * jnp.exp(cum)[..., None], n)
+        # intra-chunk: masked attention-like term with decay cum_i - cum_j + li_j
+        w_log = (cum[:, :, None, :] - cum[:, None, :, :]
+                 + lib[:, None, :, :])            # (B,c_i,c_j,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(w_log), 0.0)
+        s = jnp.einsum("bihd,bjhd->bijh", qbf, kb.astype(jnp.float32)) * w
+        intra = jnp.einsum("bijh,bjhd->bihd", s, vb.astype(jnp.float32))
+        # normalizer: n_i = decayed state part + sum_j w_ij k_j
+        n_intra = jnp.einsum("bijh,bjhd->bihd", w, kb.astype(jnp.float32))
+        num = inter + intra                       # (B,c,H,dh)
+        den = n_inter + jnp.einsum("bchd,bchd->bch", qbf, n_intra)
+        hb = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # carry update
+        decay_to_end = jnp.exp(total[:, None, :] - cum + lib)   # (B,c,H) weight per j
+        kw = kb.astype(jnp.float32) * decay_to_end[..., None]
+        C_new = C * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bchd,bche->bhde", kw, vb.astype(jnp.float32))
+        C_new = shard(C_new, "batch", None, None, "mlstm_dh")
+        n_new = n * jnp.exp(total)[..., None] + kw.sum(axis=1)
+        return (C_new, n_new), shard(hb.astype(x.dtype),
+                                     "batch", None, None, "mlstm_dh")
+
+    C0 = shard(C0, "batch", None, None, "mlstm_dh")
+    (_, _), hs = jax.lax.scan(chunk_step, (C0, n0), (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    h = L.apply_norm(p["ln_heads"], h, "rmsnorm")
+    h = h * gate.reshape(B, S, H, dh)
+    h = shard(h, "batch", "seq", None, "mlstm_dh")
+    return jnp.einsum("bshd,hde->bse", h, p["down"]["w"].astype(x.dtype))
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in = int(cfg.d_model * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    dh = d_in // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+    }
+
+
+def mlstm_decode_step(p: dict, cfg: ModelConfig, x: jax.Array, state: dict
+                      ) -> tuple[jax.Array, dict]:
+    """One-token mLSTM update.  x: (B,1,d)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    q, k, v, li, lf, gate = _mlstm_qkvif(p, cfg, x)
+    dh = q.shape[-1]
+    i = jnp.exp(li[:, 0])                          # (B,H)
+    f = jnp.exp(lf[:, 0])
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    qf = q[:, 0].astype(jnp.float32)
+    C = state["C"] * f[..., None, None] + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    n = state["n"] * f[..., None] + i[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+    h = (num / den[..., None])
+    h = L.apply_norm(p["ln_heads"], h, "rmsnorm")
+    h = h[:, None].astype(x.dtype) * gate.reshape(B, 1, H, dh)
+    out = jnp.einsum("bshd,hde->bse", h, p["down"]["w"].astype(x.dtype))
+    return out, {"C": C, "n": n}
+
+
+def mlstm_sequential(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Step-by-step oracle for the chunked form (tests)."""
+    B, S, d = x.shape
+    state = mlstm_init_state(cfg, B)
+    H = cfg.n_heads
+    q, k, v, li, lf, gate = _mlstm_qkvif(p, cfg, x)
+
+    def step(carry, inp):
+        C, n = carry
+        qf, kf, vf, lit, lft = inp
+        i = jnp.exp(lit)
+        f = jnp.exp(lft)
+        C = C * f[..., None, None] + i[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kf, vf)
+        n = n * f[..., None] + i[..., None] * kf
+        num = jnp.einsum("bhd,bhde->bhe", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+        return (C, n), num / den[..., None]
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32), k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32), li.swapaxes(0, 1), lf.swapaxes(0, 1))
+    _, hs = jax.lax.scan(step, (state["C"], state["n"]), xs)
+    h = hs.swapaxes(0, 1)                         # (B,S,H,dh)
+    h = L.apply_norm(p["ln_heads"], h, "rmsnorm")
+    dh = h.shape[-1]
+    h = h.astype(x.dtype) * gate.reshape(B, S, -1, dh)
+    return jnp.einsum("bshd,hde->bse", h, p["down"]["w"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w": {"w": L.dense_init(ks[0], d, 4 * d, pd)},     # i,f,z,o from x
+        "r": jnp.zeros((4, d), pd),                         # diagonal recurrent
+        "conv": jax.random.normal(ks[1], (cfg.conv_width, d), pd)
+                / math.sqrt(cfg.conv_width),
+        "b": jnp.zeros((4 * d,), pd),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z() - 10.0,
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, d), jnp.bfloat16)}
+
+
+def _slstm_cell(p: dict, gates: jax.Array, state: tuple):
+    """One sLSTM step.  ``gates``: (B, 4d) pre-computed input projection
+    (x @ W + b is hoisted out of the recurrence — it does not depend on
+    h_{t-1}, and leaving it inside the scan emits one tensor-parallel psum
+    per *timestep*: 3.1M collectives on the 32k-prefill cell,
+    EXPERIMENTS.md SPerf).  Only the diagonal recurrent term stays inside."""
+    c, n, h, m = state
+    gi, gf, gz, go = gates      # pre-split outside the scan: slicing the
+    # rnn-sharded (B,4d) projection inside the loop emitted one collective-
+    # permute per gate per timestep (1.9M+1.2M permutes on the 32k cell)
+    r = p["r"].astype(jnp.float32)
+    gi = gi + r[0] * h
+    gf = gf + r[1] * h
+    gz = gz + r[2] * h
+    go = go + r[3] * h
+    m_new = jnp.maximum(gf + m, gi)               # exponential-gating stabilizer
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    c = shard(f * c + i * jnp.tanh(gz), "batch", "rnn")
+    n = f * n + i
+    h = shard(jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6), "batch", "rnn")
+    return (c, n, h, m_new), h
+
+
+def slstm_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Sequential full-sequence sLSTM.  x: (B,S,d)."""
+    B, S, d = x.shape
+    from repro.models.recurrent import _conv
+    u, _ = _conv({"conv": p["conv"]}, x)
+    # hoisted input projection: one big matmul for the whole sequence
+    gates_x = (u.astype(jnp.float32) @ p["w"]["w"].astype(jnp.float32)
+               + p["b"].astype(jnp.float32))      # (B,S,4d)
+    parts = []
+    for j in range(4):                            # pre-split + reshard once
+        gj = gates_x[:, :, j * d:(j + 1) * d]
+        parts.append(shard(gj, "batch", "seq", "rnn").swapaxes(0, 1))
+    st = slstm_init_state(cfg, B)
+
+    def step(carry, gt):
+        new, h = _slstm_cell(p, gt, carry)
+        return new, h
+
+    _, hs = jax.lax.scan(step, (st["c"], st["n"], st["h"], st["m"]),
+                         tuple(parts))
+    return hs.swapaxes(0, 1).astype(x.dtype)
+
+
+def slstm_decode_step(p: dict, cfg: ModelConfig, x: jax.Array, state: dict
+                      ) -> tuple[jax.Array, dict]:
+    from repro.models.recurrent import _conv
+    u, conv_state = _conv({"conv": p["conv"]}, x, state["conv"].astype(x.dtype))
+    gates = (u[:, 0].astype(jnp.float32) @ p["w"]["w"].astype(jnp.float32)
+             + p["b"].astype(jnp.float32))
+    d = x.shape[-1]
+    gsplit = tuple(gates[:, j * d:(j + 1) * d] for j in range(4))
+    (c, n, h, m), out = _slstm_cell(p, gsplit,
+                                    (state["c"], state["n"], state["h"], state["m"]))
+    return out[:, None, :].astype(x.dtype), {
+        "c": c, "n": n, "h": h, "m": m, "conv": conv_state}

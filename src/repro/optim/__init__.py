@@ -1,0 +1,2 @@
+from repro.optim.adamw import (OptimizerConfig, adamw_init, adamw_update,
+                               lr_schedule)

@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import PreemptionHandler, StepWatchdog
+from repro.runtime.compression import compress_grads, decompress_grads

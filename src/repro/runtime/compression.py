@@ -1,0 +1,70 @@
+"""Gradient compression for the data-parallel reduce.
+
+Two codecs, applied leaf-wise before the cross-replica reduction and undone
+after (configured via ``TrainConfig.grad_compression``):
+
+* ``"bf16"`` — cast f32 grads to bf16 for the wire (2x collective bytes
+  saved; the reduction itself stays f32 via XLA's accumulate-in-f32).
+* ``"int8"`` — per-leaf symmetric int8 with an f32 scale (4x wire savings;
+  scale travels as one extra scalar per leaf).  An optional error-feedback
+  buffer carries the quantization residual to the next step (1-bit-Adam
+  style), preserving convergence.
+
+Under GSPMD the cast happens *before* the gradient all-reduce/reduce-scatter
+is inserted, so the collective moves the compressed representation — the
+dry-run HLO shows the reduced collective bytes (EXPERIMENTS.md SPerf).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads: Any, method: str | None,
+                   error_buf: Any | None = None) -> tuple[Any, Any]:
+    """Returns (wire_grads, new_error_buf)."""
+    if not method or method == "none":
+        return grads, error_buf
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), error_buf
+    if method == "int8":
+        def q(g, e):
+            gf = g.astype(jnp.float32)
+            if e is not None:
+                gf = gf + e
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            qg = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            err = gf - qg.astype(jnp.float32) * scale
+            return (qg, scale), err
+
+        leaves, treedef = jax.tree.flatten(grads)
+        eleaves = (jax.tree.leaves(error_buf) if error_buf is not None
+                   else [None] * len(leaves))
+        if len(eleaves) != len(leaves):
+            eleaves = [None] * len(leaves)
+        qs, errs = [], []
+        for g, e in zip(leaves, eleaves):
+            (qg, scale), err = q(g, e)
+            qs.append((qg, scale))
+            errs.append(err)
+        return (jax.tree.unflatten(treedef, qs),
+                jax.tree.unflatten(treedef, errs))
+    raise ValueError(f"unknown compression {method!r}")
+
+
+def decompress_grads(wire: Any, method: str | None, like: Any) -> Any:
+    if not method or method == "none":
+        return wire
+    if method == "bf16":
+        return jax.tree.map(lambda g, l: g.astype(l.dtype), wire, like)
+    if method == "int8":
+        def dq(t, l):
+            qg, scale = t
+            return (qg.astype(jnp.float32) * scale).astype(jnp.float32)
+        leaves, treedef = jax.tree.flatten(like)
+        wl = jax.tree.leaves(wire, is_leaf=lambda t: isinstance(t, tuple))
+        return jax.tree.unflatten(treedef,
+                                  [dq(t, l) for t, l in zip(wl, leaves)])
+    raise ValueError(f"unknown compression {method!r}")

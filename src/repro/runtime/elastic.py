@@ -1,0 +1,44 @@
+"""Elastic rescale: resume a run on a different chip count.
+
+Two ingredients already provided elsewhere make this nearly free:
+checkpoints are mesh-independent (checkpoint/manager.py) and data is
+step-addressable (data/pipeline.py).  This module adds the planner that maps
+an available chip count to a valid mesh and the resharding restore.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def plan_mesh_shape(n_chips: int, *, model_parallel: int = 16,
+                    pod_size: int = 256) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest usable (pod, data, model) mesh for ``n_chips`` available chips.
+
+    Keeps the model axis fixed (sharding-rule compatibility) and scales the
+    data axis; spills to a pod axis above ``pod_size`` chips.  Chips that do
+    not fill a complete data row are left idle (returned shape may use fewer
+    than ``n_chips``)."""
+    model = min(model_parallel, n_chips)
+    usable = (n_chips // model) * model
+    if usable == 0:
+        raise ValueError(f"need at least {model_parallel} chips")
+    data_total = usable // model
+    if usable <= pod_size:
+        return (data_total, model), ("data", "model")
+    pods = usable // pod_size
+    data = pod_size // model
+    return (pods, data, model), ("pod", "data", "model")
+
+
+def resume_on_mesh(ckpt: CheckpointManager, like, mesh: Mesh, shardings,
+                   *, step: int | None = None):
+    """Restore a checkpoint written on any mesh onto ``mesh``.
+
+    ``shardings`` is the pytree of NamedShardings for the new mesh (from
+    launch/sharding.py rules); leaves are placed shard-by-shard."""
+    return ckpt.restore(like, step=step, shardings=shardings)

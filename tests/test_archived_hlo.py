@@ -1,0 +1,38 @@
+"""Regression: the trip-aware analyzer on an archived production module.
+
+Guards the HLO text parsing (tuple-type comments, while-condition formats,
+fusion caps) against silent breakage — analyzing a real 256-chip compiled
+module from results/dryrun/ when present."""
+import glob
+import gzip
+import os
+
+import pytest
+
+from repro.core import hlo_counter as HC
+
+ARCHIVE = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@pytest.mark.parametrize("pattern", ["qwen2-7b__train_4k__16x16",
+                                     "xlstm-1.3b__prefill_32k__16x16"])
+def test_archived_module_analysis(pattern):
+    paths = glob.glob(os.path.join(ARCHIVE, pattern + ".hlo.gz"))
+    if not paths:
+        pytest.skip("no archived dry-run modules (run repro.launch.dryrun)")
+    with gzip.open(paths[0], "rt") as f:
+        text = f.read()
+    an = HC.Analyzer(text)
+    # the module must contain recognized while loops with trips > 1
+    trips = []
+    for comp in an.comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                cond = HC._called(ins.rest, "condition")
+                if cond in an.comps:
+                    trips.append(HC._while_trips(an.comps[cond]))
+    assert trips and max(trips) > 1, "while trip parsing regressed"
+    cost = an.entry_cost()
+    assert cost.flops > 1e12           # layer scan actually multiplied
+    assert cost.total_bytes > 1e9
+    assert cost.n_collectives > 0

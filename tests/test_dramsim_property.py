@@ -1,0 +1,116 @@
+"""Property-based cross-validation: closed-form model vs the event-driven
+DRAM simulator oracle (the board substitute — DESIGN.md S5)."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, estimate
+from repro.core.apps import microbench
+from repro.core.dramsim import simulate
+
+settings = hypothesis.settings(max_examples=30, deadline=None)
+
+
+@settings
+@hypothesis.given(
+    n_ga=st.integers(1, 4),
+    simd=st.sampled_from([1, 4, 8, 16]),
+    log_n=st.integers(14, 20),
+    dram=st.sampled_from(["DDR4-1866", "DDR4-2666"]),
+)
+def test_aligned_model_matches_sim(n_ga, simd, log_n, dram):
+    """Burst-coalesced aligned: paper's own error envelope is <10%; we allow
+    15% against the independent oracle."""
+    from repro.core.fpga import DRAM_CONFIGS
+    d = DRAM_CONFIGS[dram]
+    lsus = microbench(LsuType.BC_ALIGNED, n_ga=n_ga, simd=simd,
+                      n_elems=1 << log_n)
+    t_model = estimate(lsus, d).t_exe
+    t_sim = simulate(lsus, d).t_total
+    assert t_model == pytest.approx(t_sim, rel=0.15)
+
+
+@settings
+@hypothesis.given(
+    delta=st.integers(1, 4),
+    n_ga=st.integers(1, 3),
+    log_n=st.integers(14, 18),
+)
+def test_aligned_strided_model_matches_sim(delta, n_ga, log_n):
+    lsus = microbench(LsuType.BC_ALIGNED, n_ga=n_ga, simd=16,
+                      n_elems=1 << log_n, delta=delta)
+    t_model = estimate(lsus, DDR4_1866).t_exe
+    t_sim = simulate(lsus, DDR4_1866).t_total
+    assert t_model == pytest.approx(t_sim, rel=0.2)
+
+
+@settings
+@hypothesis.given(
+    n_ga=st.integers(1, 3),
+    log_n=st.integers(10, 14),
+    const=st.booleans(),
+)
+def test_atomic_model_matches_sim(n_ga, log_n, const):
+    """Atomic-pipelined: paper's error is 16% (unaccounted ~5ns/op); we allow
+    20% against the oracle."""
+    lsus = microbench(LsuType.ATOMIC_PIPELINED, n_ga=n_ga,
+                      n_elems=1 << log_n, val_constant=False)
+    t_model = estimate(lsus, DDR4_1866).t_exe
+    t_sim = simulate(lsus, DDR4_1866).t_total
+    assert t_model == pytest.approx(t_sim, rel=0.2)
+
+
+@settings
+@hypothesis.given(
+    log_n=st.integers(12, 16),
+    span_kb=st.sampled_from([8, 64, 1024]),
+)
+def test_ack_ordering_vs_sim(log_n, span_kb):
+    """Write-ACK is the paper's weakest class (27.9% error); we assert the
+    oracle and the model agree on ordering and within a loose factor."""
+    lsus = microbench(LsuType.BC_WRITE_ACK, n_ga=1, n_elems=1 << log_n,
+                      span_bytes=span_kb << 10)
+    ali = microbench(LsuType.BC_ALIGNED, n_ga=1, n_elems=1 << log_n)
+    t_model = estimate(lsus, DDR4_1866).t_exe
+    t_sim = simulate(lsus, DDR4_1866).t_total
+    t_ali = estimate(ali, DDR4_1866).t_exe
+    assert t_model > t_ali and t_sim > t_ali
+    assert t_model == pytest.approx(t_sim, rel=3.0)
+
+
+# ---- invariants -----------------------------------------------------------
+
+@settings
+@hypothesis.given(
+    log_n=st.integers(12, 20),
+    simd=st.sampled_from([1, 2, 4, 8, 16]),
+    delta=st.integers(1, 6),
+)
+def test_monotone_in_size_and_stride(log_n, simd, delta):
+    base = microbench(LsuType.BC_ALIGNED, n_ga=2, simd=simd,
+                      n_elems=1 << log_n, delta=delta)
+    bigger = microbench(LsuType.BC_ALIGNED, n_ga=2, simd=simd,
+                        n_elems=1 << (log_n + 1), delta=delta)
+    wider = microbench(LsuType.BC_ALIGNED, n_ga=2, simd=simd,
+                       n_elems=1 << log_n, delta=delta + 1)
+    t = estimate(base, DDR4_1866).t_exe
+    assert estimate(bigger, DDR4_1866).t_exe > t
+    assert estimate(wider, DDR4_1866).t_exe > t
+
+
+@settings
+@hypothesis.given(log_n=st.integers(12, 20), n_ga=st.integers(1, 4))
+def test_faster_dram_is_faster(log_n, n_ga):
+    lsus = microbench(LsuType.BC_ALIGNED, n_ga=n_ga, n_elems=1 << log_n)
+    assert (estimate(lsus, DDR4_2666).t_exe
+            < estimate(lsus, DDR4_1866).t_exe)
+
+
+@settings
+@hypothesis.given(log_n=st.integers(12, 18))
+def test_t_exe_at_least_t_ideal(log_n):
+    for t in (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+              LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED):
+        lsus = microbench(t, n_ga=2, n_elems=1 << log_n)
+        est = estimate(lsus, DDR4_1866)
+        assert est.t_exe >= est.t_ideal > 0

@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import gqa_decode
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.membench import ops as MB
+from repro.kernels.membench import ref as MBR
+from repro.kernels.rglru.ops import scan as rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,Hq,Hkv,D,causal,window,softcap",
+    [
+        (2, 64, 64, 4, 2, 32, True, None, 0.0),
+        (1, 128, 128, 8, 8, 64, True, None, 0.0),
+        (2, 96, 96, 4, 1, 32, True, 32, 0.0),      # MQA + sliding window
+        (2, 48, 48, 4, 4, 32, False, None, 0.0),   # encoder
+        (1, 64, 64, 2, 2, 32, True, None, 20.0),   # grok softcap
+        (1, 100, 100, 6, 2, 16, True, None, 0.0),  # non-multiple seq
+    ],
+)
+def test_flash_attention(B, Sq, Skv, Hq, Hkv, D, causal, window, softcap,
+                         dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = mha(q, k, v, causal=causal, window=window, softcap=softcap,
+              block_q=32, block_kv=16)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,kv_len", [
+    (2, 96, 8, 2, 32, 96),
+    (2, 96, 8, 2, 32, 17),
+    (1, 64, 4, 4, 64, 1),
+    (3, 80, 16, 2, 16, 40),
+])
+def test_decode_attention(B, S, Hq, Hkv, D, kv_len, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = gqa_decode(q, kc, vc, jnp.asarray(kv_len), block_s=32)
+    ref = decode_attention_ref(
+        q[:, 0].reshape(B, Hkv, Hq // Hkv, D), kc, vc, kv_len
+    ).reshape(B, 1, Hq, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (2, 64, 96, 16, 32),
+    (1, 128, 64, 64, 64),
+    (3, 96, 128, 32, 128),
+])
+def test_rglru_scan(B, S, W, bs, bw, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.6, 0.999).astype(dtype)
+    b = jax.random.normal(ks[1], (B, S, W), dtype)
+    out = rglru_scan(a, b, block_s=bs, block_w=bw)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+class TestMembench:
+    @pytest.mark.parametrize("n_ga", [1, 2, 4])
+    @pytest.mark.parametrize("block", [512, 2048])
+    def test_aligned(self, n_ga, block):
+        n = 1 << 14
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (n,), jnp.float32)
+              for i in range(n_ga)]
+        out = MB.aligned_sum(tuple(xs), block=block)
+        np.testing.assert_allclose(out, MBR.aligned_sum_ref(xs), rtol=1e-6)
+
+    @pytest.mark.parametrize("delta", [1, 2, 4])
+    def test_strided(self, delta):
+        n, block = 1 << 14, 512
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (n,), jnp.float32)
+              for i in range(2)]
+        out = MB.strided_sum(tuple(xs), delta=delta, block=block)
+        ref = MBR.strided_sum_ref(xs, delta=delta, block=block)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    def test_gather(self):
+        n, block = 1 << 14, 512
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (n,), jnp.float32)
+              for i in range(3)]
+        idx = jax.random.randint(jax.random.PRNGKey(9), (16,), 0, n // block)
+        out = MB.gather_sum(tuple(xs), idx, block=block)
+        ref = MBR.gather_sum_ref(xs, idx, block=block)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,dh,chunk", [
+    (2, 64, 3, 16, 16),
+    (1, 96, 2, 32, 32),
+    (2, 32, 4, 8, 32),     # chunk > S -> single chunk
+])
+def test_mlstm_chunk_kernel(B, S, H, dh, chunk, dtype):
+    from repro.kernels.mlstm_chunk.ops import chunked_mlstm
+    from repro.kernels.mlstm_chunk.ref import mlstm_chunk_ref
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dh), dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, dh)) / dh ** 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, dh), dtype)
+    li = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, S, H)))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 2.0)
+    out = chunked_mlstm(q, k, v, li, lf, chunk=chunk)
+    ref = mlstm_chunk_ref(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32),
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        li.transpose(0, 2, 1), lf.transpose(0, 2, 1)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               **_tol(dtype))
+
+
+def test_mlstm_model_pallas_path_matches_xla():
+    """cfg.use_pallas routes mLSTM through the chunk kernel; outputs match
+    the XLA chunked implementation."""
+    import dataclasses
+    from repro.configs import ARCHS, reduced_config
+    from repro.models import xlstm as XL
+    cfg = dataclasses.replace(reduced_config(ARCHS["xlstm-1.3b"]),
+                              dtype="float32")
+    p = XL.mlstm_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model),
+                          jnp.float32)
+    a = XL.mlstm_forward(p, cfg, x)
+    b = XL.mlstm_forward(p, dataclasses.replace(cfg, use_pallas=True), x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,181 @@
+"""Faithful-model tests: Eqs. 1-10 against hand-computed values and the
+paper's own published numbers (Tables III-V, Figs. 3-5 trends)."""
+import math
+
+import pytest
+
+from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, STRATIX10_BSP, estimate
+from repro.core.apps import APPS, microbench, table4_rows
+from repro.core.baselines import hlscope_estimate, wang_estimate
+from repro.core import model as M
+
+
+def _aligned(n_elems=1 << 20, simd=16, delta=1, write=False):
+    w = simd * 4
+    return Lsu(LsuType.BC_ALIGNED, ls_width=w, ls_acc=n_elems // simd,
+               ls_bytes=w, delta=delta, is_write=write)
+
+
+class TestEquations:
+    def test_eq2_t_ideal_is_bytes_over_bw(self):
+        lsu = _aligned(n_elems=1 << 20)
+        est = estimate([lsu], DDR4_1866)
+        expected = (1 << 20) * 4 / DDR4_1866.bw_mem
+        assert est.t_ideal == pytest.approx(expected, rel=1e-12)
+
+    def test_eq4_single_lsu_has_no_overhead(self):
+        est = estimate([_aligned()], DDR4_1866)
+        assert est.t_ovh == 0.0
+
+    def test_eq4_overhead_one_trow_per_burst(self):
+        lsus = [_aligned(), _aligned(write=True)]
+        est = estimate(lsus, DDR4_1866)
+        burst = STRATIX10_BSP.max_transaction_bytes(DDR4_1866)  # 1024 B
+        n_bursts = (1 << 20) * 4 / burst
+        assert burst == 1024
+        assert est.t_ovh == pytest.approx(
+            2 * n_bursts * DDR4_1866.t_row, rel=1e-12)
+
+    def test_eq5_burst_size(self):
+        assert STRATIX10_BSP.max_transaction_bytes(DDR4_1866) == \
+            2 ** STRATIX10_BSP.burst_cnt * DDR4_1866.dq * DDR4_1866.bl
+
+    def test_eq6_eq9_eq10_t_row(self):
+        d = DDR4_1866
+        assert M.t_row_seconds(_aligned(), d) == d.t_rcd + d.t_rp
+        ack = Lsu(LsuType.BC_WRITE_ACK, ls_width=4, ls_acc=10, ls_bytes=4,
+                  is_write=True)
+        assert M.t_row_seconds(ack, d) == d.t_rcd + d.t_rp + d.t_wr
+        atom = Lsu(LsuType.ATOMIC_PIPELINED, ls_width=4, ls_acc=10,
+                   ls_bytes=4, is_write=True)
+        assert M.t_row_seconds(atom, d) == 2 * (d.t_rcd + d.t_rp) + d.t_wr
+
+    def test_eq3_memory_bound_criterion(self):
+        # SIMD=16 int: ls_width = 64 = dq*bl -> each LSU contributes 1.0
+        est = estimate([_aligned(simd=16)], DDR4_1866)
+        assert est.memory_bound and est.bound_ratio == pytest.approx(1.0)
+        # SIMD=1: 4/64 per LSU -> compute bound until 16 LSUs
+        est1 = estimate([_aligned(simd=1)], DDR4_1866)
+        assert not est1.memory_bound
+        est16 = estimate([_aligned(simd=1) for _ in range(16)], DDR4_1866)
+        assert est16.memory_bound
+
+    def test_eq7_eq8_max_th_knee_at_delta7(self):
+        """Fig. 5b: with SIMD=16 int accesses, the max_th trigger takes over
+        exactly at stride 7 for the Stratix-10 BSP parameters."""
+        def burst(delta):
+            lsu = Lsu(LsuType.BC_NON_ALIGNED, ls_width=64, ls_acc=1024,
+                      ls_bytes=64, delta=delta)
+            return M.burst_size_bytes(lsu, DDR4_1866, STRATIX10_BSP)
+
+        assert burst(6) == pytest.approx(64 / 6)      # page trigger branch
+        assert burst(7) == pytest.approx(
+            STRATIX10_BSP.max_th * 64 / 8 / 7)        # max_th branch
+        assert burst(7) > burst(6)                    # the knee "optimizes"
+
+    def test_eq10_atomic_constant_merges_by_f(self):
+        atom = lambda const: Lsu(LsuType.ATOMIC_PIPELINED, ls_width=4,
+                                 ls_acc=1000, ls_bytes=4, is_write=True,
+                                 val_constant=const)
+        t_var = estimate([atom(False)], DDR4_1866, f=16).t_ovh
+        t_const = estimate([atom(True)], DDR4_1866, f=16).t_ovh
+        assert t_var == pytest.approx(16 * t_const, rel=1e-9)
+
+
+class TestPaperNumbers:
+    def test_effective_bandwidth_drop(self):
+        """SV-A1: DRAM bandwidth 14.2 -> 10.5 GB/s as #lsu grows (26% drop)."""
+        one = estimate(microbench(LsuType.BC_ALIGNED, n_ga=1,
+                                  include_write=False), DDR4_1866)
+        many = estimate(microbench(LsuType.BC_ALIGNED, n_ga=4), DDR4_1866)
+        assert one.effective_bandwidth == pytest.approx(14.93e9, rel=0.01)
+        assert many.effective_bandwidth == pytest.approx(10.7e9, rel=0.03)
+        drop = 1 - many.effective_bandwidth / one.effective_bandwidth
+        assert 0.2 < drop < 0.33                      # paper: 26 %
+
+    def test_fig5a_stride_linearity(self):
+        """Fig. 5a: aligned time scales ~linearly with delta."""
+        times = {}
+        for d in (1, 2, 3, 4):
+            lsus = microbench(LsuType.BC_ALIGNED, n_ga=2, delta=d)
+            times[d] = estimate(lsus, DDR4_1866).t_exe
+        for d in (2, 3, 4):
+            assert times[d] / times[1] == pytest.approx(d, rel=1e-6)
+
+    def test_table4_errors_below_paper_bound(self):
+        """Table IV: all application errors <= 9.2% + the paper's own column
+        is reproduced within ~2.5 points (inputs calibrated, error genuine)."""
+        rows = table4_rows()
+        assert len(rows) == 10
+        for r in rows:
+            assert r["err_pct"] <= 9.5, r
+        mean_err = sum(r["err_pct"] for r in rows) / len(rows)
+        assert mean_err <= 7.6 + 1.0                  # paper mean: 7.6 %
+
+    def test_table4_held_out_stride_row(self):
+        """VectorAdd delta=2 is predicted from the delta=1 calibration."""
+        row = [r for r in table4_rows() if r["kernel"] == "vectoradd_d2"][0]
+        assert row["err_pct"] < 9.2
+
+    def test_ack_much_slower_than_aligned(self):
+        """SV-A3: write-ACK is an order of magnitude worse than aligned
+        (paper measures 24x)."""
+        n = 1 << 18
+        ali = estimate(microbench(LsuType.BC_ALIGNED, n_ga=1, n_elems=n),
+                       DDR4_1866)
+        ack = estimate(microbench(LsuType.BC_WRITE_ACK, n_ga=1, n_elems=n),
+                       DDR4_1866)
+        assert ack.t_exe > 5 * ali.t_exe
+
+    def test_atomic_linear_in_ga(self):
+        """Fig. 4d: atomic time grows linearly with #ga."""
+        ts = [estimate(microbench(LsuType.ATOMIC_PIPELINED, n_ga=g,
+                                  n_elems=1 << 16), DDR4_1866).t_exe
+              for g in (1, 2, 3, 4)]
+        for g in (2, 3, 4):
+            assert ts[g - 1] / ts[0] == pytest.approx(g, rel=0.05)
+
+
+class TestBaselineComparison:
+    """Table V: this work vs Wang [6] and HLScope+ [7]."""
+
+    def test_wang_ack_catastrophic(self):
+        """Wang's 8049% / 11279% ACK signature: >= 10x overestimate."""
+        lsus = microbench(LsuType.BC_WRITE_ACK, n_ga=1, n_elems=1 << 18)
+        ours = estimate(lsus, DDR4_1866).t_exe
+        wang = wang_estimate(lsus, DDR4_1866)
+        assert wang > 10 * ours
+
+    def test_baselines_do_not_track_dram_change(self):
+        """Table V lower half: at DDR4-2666 our estimate scales with the
+        faster DRAM; Wang's and HLScope+'s stay put."""
+        lsus = microbench(LsuType.BC_ALIGNED, n_ga=1, include_write=False)
+        ours_1866 = estimate(lsus, DDR4_1866).t_exe
+        ours_2666 = estimate(lsus, DDR4_2666).t_exe
+        assert ours_2666 < ours_1866 * 0.75
+        assert wang_estimate(lsus, DDR4_2666) == wang_estimate(lsus, DDR4_1866)
+        assert hlscope_estimate(lsus, DDR4_2666) == \
+            hlscope_estimate(lsus, DDR4_1866)
+
+    def test_at_least_2x_more_accurate(self):
+        """Against the dramsim oracle, our max error across the Table V
+        microbenchmarks is >= 2x smaller than either baseline's."""
+        from repro.core.dramsim import simulate
+
+        cases = [
+            microbench(LsuType.BC_ALIGNED, n_ga=1, n_elems=1 << 18,
+                       include_write=False),
+            microbench(LsuType.BC_ALIGNED, n_ga=4, n_elems=1 << 18),
+            microbench(LsuType.ATOMIC_PIPELINED, n_ga=2, n_elems=1 << 12),
+        ]
+        errs = {"ours": [], "wang": [], "hlscope": []}
+        for dram in (DDR4_1866, DDR4_2666):
+            for lsus in cases:
+                t_meas = simulate(lsus, dram).t_total
+                for name, t_est in [
+                        ("ours", estimate(lsus, dram).t_exe),
+                        ("wang", wang_estimate(lsus, dram)),
+                        ("hlscope", hlscope_estimate(lsus, dram))]:
+                    errs[name].append(abs(t_est - t_meas) / t_meas)
+        assert max(errs["ours"]) * 2 <= max(errs["wang"])
+        assert max(errs["ours"]) * 2 <= max(errs["hlscope"])

@@ -1,0 +1,100 @@
+"""Predictor + roofline unit tests (TPU adaptation layer)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hlo as HLO
+from repro.core.hbm import AccessClass, TPU_V5E, Traffic, memory_time, traffic_time
+from repro.core.predictor import predict
+from repro.core.roofline import RooflineCell, build_cell
+
+
+def _compiled(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+class TestHbmModel:
+    def test_stream_near_peak(self):
+        t = Traffic(AccessClass.STREAM, 819e9)  # 1 second of peak traffic
+        ideal, ovh = traffic_time(t, TPU_V5E)
+        assert ideal == pytest.approx(1.0)
+        assert ovh / ideal < 0.1                 # K_stream ~ 0.92
+
+    def test_gather_small_rows_much_slower(self):
+        nbytes = 1e9
+        stream = sum(traffic_time(Traffic(AccessClass.STREAM, nbytes)))
+        gather64 = sum(traffic_time(Traffic(AccessClass.GATHER, nbytes,
+                                            row_bytes=64)))
+        gather4k = sum(traffic_time(Traffic(AccessClass.GATHER, nbytes,
+                                            row_bytes=4096)))
+        assert gather64 > 4 * stream             # 64B rows waste 7/8 of each txn
+        assert gather4k < 2 * stream             # big rows ~ streaming
+        assert gather64 > gather4k
+
+    def test_eq1_additivity(self):
+        comps = [Traffic(AccessClass.STREAM, 1e9),
+                 Traffic(AccessClass.GATHER, 1e8, row_bytes=128)]
+        total = memory_time(comps)
+        assert total == pytest.approx(
+            sum(sum(traffic_time(c)) for c in comps))
+
+
+class TestPredictor:
+    def test_matmul_is_compute_bound(self):
+        # 4096^3: AI ~ 680 FLOP/B, well above the v5e ridge (~241) even with
+        # the CPU module's bf16->f32 legalization doubling the traffic.
+        m = jax.ShapeDtypeStruct((4096, 4096), jnp.bfloat16)
+        c = _compiled(lambda a: a @ a, m)
+        pred = predict(c.as_text(), HLO.cost_analysis_stats(c))
+        assert pred.bottleneck == "compute"
+        assert pred.flops == pytest.approx(2 * 4096 ** 3, rel=0.05)
+
+    def test_elementwise_is_memory_bound(self):
+        x = jax.ShapeDtypeStruct((1 << 22,), jnp.float32)
+        c = _compiled(lambda a, b: a + b, x, x)
+        pred = predict(c.as_text(), HLO.cost_analysis_stats(c))
+        assert pred.bottleneck == "memory"
+        assert pred.arithmetic_intensity < 1.0
+
+    def test_gather_classified(self):
+        emb = jax.ShapeDtypeStruct((1 << 16, 256), jnp.float32)
+        idx = jax.ShapeDtypeStruct((1 << 14,), jnp.int32)
+        c = _compiled(lambda e, i: e[i].sum(), emb, idx)
+        pred = predict(c.as_text(), HLO.cost_analysis_stats(c))
+        names = {t.name for t in pred.memory_components}
+        assert "gather" in names
+
+
+class TestRooflineCell:
+    def _cell(self, **kw):
+        base = dict(arch="a", shape="s", mesh="m", chips=256,
+                    flops_per_chip=1e12, bytes_per_chip=1e9,
+                    collective_operand_bytes=1e8, collective_wire_bytes=1e8,
+                    n_collectives=4, model_flops_global=2e14,
+                    t_compute=1e12 / 197e12, t_memory_naive=1e9 / 819e9,
+                    t_memory_refined=1.5e9 / 819e9,
+                    t_collective=1e8 / 200e9)
+        base.update(kw)
+        return RooflineCell(**base)
+
+    def test_dominant_and_fraction(self):
+        c = self._cell()
+        assert c.dominant == "compute"
+        assert 0 < c.roofline_fraction <= 1.0
+        # useful ratio: 2e14 / (1e12*256) = 0.78
+        assert c.useful_flops_ratio == pytest.approx(0.78, abs=0.01)
+
+    def test_memory_dominant(self):
+        c = self._cell(t_compute=1e-6)
+        assert c.dominant == "memory"
+
+    def test_build_cell_from_text(self):
+        m = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+        compiled = _compiled(lambda a: jnp.tanh(a @ a), m)
+        cell = build_cell(arch="t", shape="s", mesh="1x1", chips=1,
+                          hlo_text=compiled.as_text(),
+                          cost=HLO.cost_analysis_stats(compiled),
+                          model_flops_global=2 * 512 ** 3)
+        assert cell.flops_per_chip == pytest.approx(2 * 512 ** 3, rel=0.05)
+        assert cell.useful_flops_ratio == pytest.approx(1.0, rel=0.05)
+        assert cell.t_step > 0

@@ -1,0 +1,175 @@
+"""Substrate tests: optimizer, data determinism, checkpointing, fault
+tolerance, gradient compression."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, reduced_config
+from repro.data.pipeline import DataConfig, MemmapDataset, SyntheticDataset
+from repro.optim import OptimizerConfig, adamw_init, adamw_update, lr_schedule
+from repro.runtime import PreemptionHandler, StepWatchdog
+from repro.runtime.compression import compress_grads, decompress_grads
+
+
+class TestOptimizer:
+    def test_adamw_converges_on_quadratic(self):
+        cfg = OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                              total_steps=200, min_lr_ratio=1.0)
+        target = jnp.asarray([[1.5, -2.0], [0.5, 3.0]])
+        params = {"w": jnp.zeros((2, 2))}
+        state = adamw_init(params, cfg)
+        for _ in range(200):
+            grads = {"w": params["w"] - target}
+            params, state, _ = adamw_update(grads, state, params, cfg)
+        np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+    def test_clipping_bounds_update(self):
+        cfg = OptimizerConfig(lr=1.0, clip_norm=1e-3, weight_decay=0.0,
+                              warmup_steps=0)
+        params = {"w": jnp.zeros((4,))}
+        state = adamw_init(params, cfg)
+        huge = {"w": jnp.full((4,), 1e9)}
+        new, _, m = adamw_update(huge, state, params, cfg)
+        assert float(m["grad_norm"]) > 1e8
+        assert float(jnp.abs(new["w"]).max()) < 10.0
+
+    def test_bf16_state_dtype(self):
+        cfg = OptimizerConfig(state_dtype="bfloat16")
+        params = {"w": jnp.zeros((8, 8), jnp.float32)}
+        state = adamw_init(params, cfg)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        grads = {"w": jnp.ones((8, 8))}
+        _, state2, _ = adamw_update(grads, state, params, cfg)
+        assert state2["m"]["w"].dtype == jnp.bfloat16
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+        assert float(lr_schedule(cfg, jnp.asarray(0))) == 0.0
+        assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1e-3)
+        assert float(lr_schedule(cfg, jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-3)
+
+
+class TestData:
+    def test_synthetic_deterministic_by_step(self):
+        cfg = reduced_config(ARCHS["stablelm-3b"])
+        d = SyntheticDataset(cfg, DataConfig(seq_len=16, batch_size=4, seed=7))
+        b1 = d.get_batch(42)
+        b2 = d.get_batch(42)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(b1["tokens"], d.get_batch(43)["tokens"])
+
+    def test_shards_disjoint_streams(self):
+        cfg = reduced_config(ARCHS["stablelm-3b"])
+        mk = lambda s: SyntheticDataset(
+            cfg, DataConfig(seq_len=16, batch_size=4, seed=7, n_shards=2,
+                            shard=s))
+        assert not np.array_equal(mk(0).get_batch(5)["tokens"],
+                                  mk(1).get_batch(5)["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        cfg = reduced_config(ARCHS["stablelm-3b"])
+        d = SyntheticDataset(cfg, DataConfig(seq_len=16, batch_size=2))
+        b = d.get_batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_memmap_dataset(self, tmp_path):
+        cfg = reduced_config(ARCHS["stablelm-3b"])
+        path = str(tmp_path / "tokens.bin")
+        np.arange(10_000, dtype=np.uint16).tofile(path)
+        d = MemmapDataset(cfg, DataConfig(seq_len=32, batch_size=4), path)
+        b = d.get_batch(3)
+        assert b["tokens"].shape == (4, 32)
+        np.testing.assert_array_equal(b["tokens"][:, 1:] % cfg.vocab_size,
+                                      b["labels"][:, :-1])
+        np.testing.assert_array_equal(b["tokens"],
+                                      d.get_batch(3)["tokens"])
+
+
+class TestCheckpoint:
+    def _tree(self, v=0.0):
+        return {"a": jnp.full((4, 4), v), "b": [jnp.arange(3.0),
+                                                jnp.asarray(7, jnp.int32)]}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = self._tree(1.5)
+        mgr.save(10, tree)
+        restored, step = mgr.restore(self._tree())
+        assert step == 10
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        np.testing.assert_array_equal(restored["b"][0], tree["b"][0])
+
+    def test_latest_and_cleanup(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(float(s)))
+        assert mgr.all_steps() == [3, 4]
+        restored, step = mgr.restore(self._tree())
+        assert step == 4
+        assert float(restored["a"][0, 0]) == 4.0
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(5, self._tree(2.0), blocking=False)
+        mgr.wait()
+        _, step = mgr.restore(self._tree())
+        assert step == 5
+
+    def test_atomicity_no_partial_dirs(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self._tree())
+        for name in os.listdir(tmp_path):
+            assert not name.endswith(".tmp")
+
+
+class TestFaultTolerance:
+    def test_preemption_flag(self):
+        h = PreemptionHandler()
+        assert not h.should_stop
+        h.trigger()
+        assert h.should_stop
+
+    def test_watchdog_flags_stragglers(self):
+        events = []
+        wd = StepWatchdog(factor=5.0, warmup=3,
+                          on_straggler=lambda s, dt, med: events.append(s))
+        for step in range(10):
+            wd.start_step(step)
+            if step == 7:
+                time.sleep(0.12)
+            else:
+                time.sleep(0.002)
+            wd.end_step()
+        assert wd.straggler_steps == [7]
+        assert events == [7]
+
+
+class TestCompression:
+    def _grads(self):
+        k = jax.random.PRNGKey(0)
+        return {"w": jax.random.normal(k, (64, 64)) * 0.01,
+                "b": jax.random.normal(k, (64,))}
+
+    def test_bf16_roundtrip(self):
+        g = self._grads()
+        wire, _ = compress_grads(g, "bf16")
+        assert wire["w"].dtype == jnp.bfloat16
+        back = decompress_grads(wire, "bf16", g)
+        np.testing.assert_allclose(back["w"], g["w"], rtol=1e-2, atol=1e-4)
+
+    def test_int8_roundtrip_with_error_feedback(self):
+        g = self._grads()
+        wire, err = compress_grads(g, "int8")
+        qg, scale = jax.tree.leaves(wire, is_leaf=lambda t: isinstance(t, tuple))[0]
+        assert qg.dtype == jnp.int8
+        back = decompress_grads(wire, "int8", g)
+        np.testing.assert_allclose(back["w"], g["w"], atol=float(scale) + 1e-6)
+        # error feedback: residual equals exactly what quantization lost
+        np.testing.assert_allclose(np.asarray(g["w"]) - np.asarray(back["w"]),
+                                   np.asarray(err["w"]), atol=1e-7)
