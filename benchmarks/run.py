@@ -1,15 +1,30 @@
 """Benchmark driver — one function per paper table/figure plus the TPU
-roofline harness.  Prints ``name,us_per_call,derived`` CSV summary rows (the
-harness contract) followed by the detailed per-table CSVs.
+roofline harness and the design-space sweep engine.  Prints
+``name,us_per_call,derived`` CSV summary rows (the harness contract)
+followed by the detailed per-table CSVs.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--details] [--roofline-only]
+Usage:
+    python -m benchmarks.run [--details] [--roofline-only]
+    python -m benchmarks.run --smoke --out smoke.json   # fast CI job
+
+``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
+Fig. 5 stride, and a reduced design-space sweep) and, with ``--out``,
+writes the full results as a JSON artifact for CI upload.
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import io
+import json
+import pathlib
 import sys
+import time
+
+try:
+    import repro  # noqa: F401 — installed (pip install -e .) or on PYTHONPATH
+except ImportError:  # running from a raw checkout
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
 
 def _csv(rows: list[dict]) -> str:
@@ -27,42 +42,59 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--details", action="store_true",
                     help="print full per-table CSVs")
-    ap.add_argument("--roofline-only", action="store_true")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--roofline-only", action="store_true")
+    mode.add_argument("--smoke", action="store_true",
+                      help="fast subset: model-only tables + reduced sweep")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write results as JSON to this path")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as PT
+    from benchmarks import sweep_bench as SB
 
     summary: list[tuple[str, float, str]] = []
     details: dict[str, list[dict]] = {}
 
-    if not args.roofline_only:
-        for name, fn in PT.ALL.items():
-            rows, us = PT.timed(fn)
-            details[name] = rows
-            derived = _derive(name, rows)
-            summary.append((name, us, derived))
+    if args.smoke:
+        tables = {k: PT.ALL[k] for k in ("table4_applications", "fig5_stride")
+                  if k in PT.ALL}
+        sweep_fn = lambda: SB.sweep_speedup(SB.SMOKE_AXES)  # noqa: E731
+    else:
+        tables = {} if args.roofline_only else dict(PT.ALL)
+        sweep_fn = SB.sweep_speedup
 
-    # roofline (reads dry-run artifacts if present)
-    try:
-        from benchmarks import roofline as RL
-        import time
-        t0 = time.perf_counter()
-        cells = RL.load_cells()
-        us = (time.perf_counter() - t0) / max(1, len(cells)) * 1e6
-        if cells:
-            import statistics
-            ufl = [c.useful_flops_ratio for c in cells
-                   if c.shape == "train_4k" and c.mesh == "16x16"]
-            coll = sum(1 for c in cells if c.dominant == "collective")
-            derived = (f"cells={len(cells)} "
-                       f"train_useful_flops_median={statistics.median(ufl):.2f} "
-                       f"collective_dominant={coll}")
-        else:
-            derived = "no dry-run artifacts yet"
-        summary.append(("roofline", us, derived))
-        details["roofline"] = [c.as_row() for c in cells]
-    except Exception as e:  # noqa: BLE001
-        summary.append(("roofline", 0.0, f"error: {e}"))
+    for name, fn in tables.items():
+        rows, us = PT.timed(fn)
+        details[name] = rows
+        summary.append((name, us, _derive(name, rows)))
+
+    if not args.roofline_only:
+        rows, us = PT.timed(sweep_fn)
+        details["sweep"] = rows
+        summary.append(("sweep", us, _derive("sweep", rows)))
+
+    if not args.smoke:
+        # roofline (reads dry-run artifacts if present)
+        try:
+            from benchmarks import roofline as RL
+            t0 = time.perf_counter()
+            cells = RL.load_cells()
+            us = (time.perf_counter() - t0) / max(1, len(cells)) * 1e6
+            if cells:
+                import statistics
+                ufl = [c.useful_flops_ratio for c in cells
+                       if c.shape == "train_4k" and c.mesh == "16x16"]
+                coll = sum(1 for c in cells if c.dominant == "collective")
+                derived = (f"cells={len(cells)} "
+                           f"train_useful_flops_median={statistics.median(ufl):.2f} "
+                           f"collective_dominant={coll}")
+            else:
+                derived = "no dry-run artifacts yet"
+            summary.append(("roofline", us, derived))
+            details["roofline"] = [c.as_row() for c in cells]
+        except Exception as e:  # noqa: BLE001
+            summary.append(("roofline", 0.0, f"error: {e}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in summary:
@@ -72,6 +104,17 @@ def main() -> None:
         for name, rows in details.items():
             print(f"\n== {name} ==")
             sys.stdout.write(_csv(rows))
+
+    if args.out:
+        payload = {
+            "summary": [{"name": n, "us_per_call": round(u, 1), "derived": d}
+                        for n, u, d in summary],
+            "details": details,
+        }
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(payload, indent=2, default=str))
+        print(f"wrote {out}")
 
 
 def _derive(name: str, rows: list[dict]) -> str:
@@ -93,6 +136,10 @@ def _derive(name: str, rows: list[dict]) -> str:
     if name == "fig3_membound":
         mb = sum(1 for r in rows if r["memory_bound"])
         return f"membound_points={mb}/{len(rows)}"
+    if name == "sweep":
+        r = rows[0]
+        return (f"points={r['n_points']} speedup={r['speedup']}x "
+                f"agree={r['agree_rtol_1e6']} pareto={r['pareto_points']}")
     return f"rows={len(rows)}"
 
 

@@ -1,0 +1,111 @@
+"""Design-space sweep benchmark: batched vs scalar scoring of Eqs. 1-10.
+
+The paper's value proposition is exploration speed; this benchmark measures
+it.  It scores the same >= 10k-point design space twice — once by looping
+the scalar ``estimate(microbench(...))`` path, once through
+``sweep.sweep_grid`` — verifies element-wise agreement, and reports the
+speedup plus the Pareto front of the space.
+
+Run:  python -m benchmarks.sweep_bench  (or via benchmarks/run.py [--smoke])
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+try:
+    import repro  # noqa: F401 — installed (pip install -e .) or on PYTHONPATH
+except ImportError:  # running from a raw checkout
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import DDR4_1866, DDR4_2666, LsuType, estimate
+from repro.core.apps import microbench
+from repro.core.fpga import BspParams, STRATIX10_BSP
+from repro.core.sweep import SweepResult, sweep_grid
+
+#: >= 10k-point space over every GMI LSU type, LSU count, SIMD width, input
+#: size, stride, write inclusion, DRAM part and BSP variant.
+FULL_AXES = dict(
+    lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+              LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED],
+    n_ga=[1, 2, 3, 4, 5],
+    simd=[1, 2, 4, 8, 16],
+    n_elems=[1 << 12, 1 << 14, 1 << 16, 1 << 18],
+    delta=[1, 2, 3, 5, 7],
+    include_write=[False, True],
+    dram=[DDR4_1866, DDR4_2666],
+    bsp=[STRATIX10_BSP, BspParams(burst_cnt=5, max_th=64)],
+)
+
+SMOKE_AXES = dict(
+    lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+              LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED],
+    n_ga=[1, 2, 4],
+    simd=[1, 4, 16],
+    n_elems=[1 << 14, 1 << 18],
+    delta=[1, 2, 7],
+    dram=[DDR4_1866, DDR4_2666],
+)
+
+
+def scalar_loop(res: SweepResult) -> np.ndarray:
+    """Score every point of ``res``'s design space with the scalar path."""
+    P = res.points
+    out = np.empty(res.n_points)
+    stride_types = (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+                    LsuType.BC_CACHE)
+    for i in range(res.n_points):
+        t = P["lsu_type"][i]
+        lsus = microbench(
+            t,
+            n_ga=int(P["n_ga"][i]),
+            simd=int(P["simd"][i]),
+            n_elems=int(P["n_elems"][i]),
+            delta=int(P["delta"][i]) if t in stride_types else 1,
+            elem_bytes=int(P["elem_bytes"][i]),
+            include_write=bool(P["include_write"][i]),
+            val_constant=bool(P["val_constant"][i]),
+        )
+        out[i] = estimate(lsus, P["dram"][i], P["bsp"][i],
+                          f=int(P["simd"][i])).t_exe
+    return out
+
+
+def sweep_speedup(axes: dict | None = None) -> list[dict]:
+    """One-row summary: points, batched/scalar wall time, speedup, fidelity."""
+    axes = dict(axes or FULL_AXES)
+    t0 = time.perf_counter()
+    res = sweep_grid(**axes)
+    t_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    scalar = scalar_loop(res)
+    t_scalar = time.perf_counter() - t0
+
+    agree = bool(np.allclose(scalar, res.t_exe, rtol=1e-6, atol=0.0))
+    max_rel = float(np.max(np.abs(scalar - res.t_exe)
+                           / np.maximum(np.abs(scalar), 1e-300)))
+    front = res.pareto()
+    return [{
+        "n_points": res.n_points,
+        "batched_ms": round(t_batch * 1e3, 3),
+        "scalar_ms": round(t_scalar * 1e3, 3),
+        "speedup": round(t_scalar / t_batch, 1),
+        "agree_rtol_1e6": agree,
+        "max_rel_err": f"{max_rel:.2e}",
+        "pareto_points": int(len(front)),
+        "memory_bound_points": int(res.memory_bound.sum()),
+    }]
+
+
+def main() -> None:
+    rows = sweep_speedup()
+    for row in rows:
+        print(", ".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

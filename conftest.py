@@ -1,0 +1,13 @@
+"""Make the src/ layout importable when the package is not pip-installed.
+
+``pip install -e .`` (what CI does) makes ``repro`` importable on its own;
+this fallback lets ``python -m pytest`` work from a raw checkout too,
+without a manual ``PYTHONPATH=src``.
+"""
+import pathlib
+import sys
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "src"))

@@ -1,20 +1,75 @@
 """Classify any jitted JAX function as memory- vs compute- vs collective-
-bound without running it — the Eq. 3 criterion transplanted to XLA.
+bound without running it — the Eq. 3 criterion transplanted to XLA — and
+sweep the paper's FPGA design space at exploration scale.
 
 Demonstrates the membench Pallas kernels (the paper's Listing-4
 microbenchmarks on TPU): contiguous streaming, strided, and data-dependent
-gather — and shows how the access-class split moves between them.
+gather — and shows how the access-class split moves between them.  Then
+drives the vectorized sweep engine over thousands of LSU/SIMD/stride/DRAM
+design points, printing the fastest configurations and the Pareto front of
+predicted time vs interconnect resource use.
 
-Run:  PYTHONPATH=src python examples/membound_explorer.py
+Run:  python examples/membound_explorer.py   (src/ is bootstrapped if not
+installed; pass --sweep-only to skip the jax compilation part)
 """
-import jax
-import jax.numpy as jnp
+import pathlib
+import sys
+import time
 
-from repro.core import hlo as HLO
-from repro.core.predictor import predict
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+
+def sweep_demo() -> None:
+    """Score a full design space in one pass and show the interesting slices."""
+    import numpy as np
+
+    from repro.core import DDR4_1866, DDR4_2666, LsuType
+    from repro.core.sweep import sweep_grid
+
+    t0 = time.perf_counter()
+    res = sweep_grid(
+        lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+                  LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED],
+        n_ga=[1, 2, 3, 4],
+        simd=[1, 2, 4, 8, 16],
+        n_elems=[1 << 16],
+        delta=[1, 2, 4, 7],
+        dram=[DDR4_1866, DDR4_2666],
+    )
+    dt = time.perf_counter() - t0
+    print(f"\nDesign-space sweep: {res.n_points} points scored in "
+          f"{dt * 1e3:.1f} ms ({res.n_points / dt:,.0f} points/s)")
+    print(f"memory-bound: {int(res.memory_bound.sum())}/{res.n_points}")
+
+    print("\nfastest 5 designs (by predicted T_exe):")
+    for row in res.top_k(5):
+        print(f"  {row['lsu_type']:>14s} n_ga={row['n_ga']} simd={row['simd']:2d} "
+              f"delta={row['delta']} {row['dram']}: {row['t_exe_ms']:.3f} ms "
+              f"({row['eff_bw_gbs']:.1f} GB/s)")
+
+    front = res.pareto()          # minimize (time, LSU interconnect width)
+    print(f"\nPareto front (time vs resource): {len(front)} points")
+    seen = set()    # collapse performance ties (inert axes, equal designs)
+    for row in res.rows(front):
+        key = (row["lsu_type"], row["resource_bytes"], row["t_exe_ms"])
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"  {row['lsu_type']:>14s} simd={row['simd']:2d} "
+              f"res={row['resource_bytes']:.0f}B: {row['t_exe_ms']:.3f} ms")
+        if len(seen) >= 5:
+            break
 
 
 def explain(name: str, fn, *specs) -> None:
+    import jax
+
+    from repro.core import hlo as HLO
+    from repro.core.predictor import predict
+
     compiled = jax.jit(fn).lower(*specs).compile()
     pred = predict(compiled.as_text(), HLO.cost_analysis_stats(compiled))
     classes = {c.name: c.nbytes for c in pred.memory_components}
@@ -24,6 +79,9 @@ def explain(name: str, fn, *specs) -> None:
 
 
 def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
     n = 1 << 20
     x = jax.ShapeDtypeStruct((n,), jnp.float32)
     m = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
@@ -52,6 +110,11 @@ def main() -> None:
     print(f"  gather_sum    -> {out.shape} (block indirection via scalar "
           f"prefetch)")
 
+    sweep_demo()
+
 
 if __name__ == "__main__":
-    main()
+    if "--sweep-only" in sys.argv[1:]:
+        sweep_demo()
+    else:
+        main()

@@ -1,12 +1,15 @@
 """Core: the paper's analytical memory model.
 
 Faithful FPGA/HLS layer (paper Eqs. 1-10):
-    fpga      -- DRAM/BSP parameter sets (Table III)
-    lsu       -- LSU taxonomy (Table I) and descriptors (Table II)
-    model     -- T_exe estimation + memory-bound criterion
-    dramsim   -- event-driven DRAM oracle (board substitute)
-    baselines -- Wang [6] / HLScope+ [7] comparison models
-    apps      -- Table IV applications + SIV microbenchmarks
+    fpga        -- DRAM/BSP parameter sets (Table III)
+    lsu         -- LSU taxonomy (Table I) and descriptors (Table II)
+    model       -- T_exe estimation + memory-bound criterion (scalar API)
+    model_batch -- array-based core of the same equations (vectorized)
+    sweep       -- design-space sweeps: grid/random scoring + Pareto fronts
+    dramsim     -- event-driven DRAM oracle (board substitute)
+    baselines   -- Wang [6] / HLScope+ [7] comparison models
+    apps        -- Table IV applications + SIV microbenchmarks
+    cache       -- on-disk cache of compiled-HLO analyses (autotune)
 
 TPU/XLA adaptation layer (DESIGN.md S2):
     hbm       -- access-class taxonomy + HBM/ICI parameters
@@ -19,3 +22,5 @@ TPU/XLA adaptation layer (DESIGN.md S2):
 from repro.core.fpga import DDR4_1866, DDR4_2666, BspParams, DramParams, STRATIX10_BSP
 from repro.core.lsu import Lsu, LsuType, make_global_access
 from repro.core.model import KernelEstimate, estimate, memory_bound_ratio
+from repro.core.model_batch import BatchEstimate, GroupBatch, estimate_batch
+from repro.core.sweep import SweepResult, pareto_front, sweep_grid, sweep_random

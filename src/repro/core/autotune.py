@@ -5,22 +5,27 @@ explore the design space without paying for the full build (bitstream there,
 a pod reservation here).  ``autotune`` does exactly that: enumerate candidate
 knob settings (KV-cache sharding axis, gradient compression, remat policy,
 attention tile sizes), *lower + compile on CPU* (seconds per candidate),
-predict each candidate's step time with the analytical model, and rank —
-no TPU time spent.
+then score and rank **all candidates in one batched pass** of the analytical
+model (`hbm.memory_time_batch`) — no TPU time spent.
+
+Compiled-HLO analyses are cached on disk (`cache.HloAnalysisCache`), keyed
+by a hash of the full candidate configuration, so re-ranking a design space
+(different hardware parameters, resumed runs) skips the compile entirely.
 
 Used by examples/autotune_sharding.py and the SPerf hillclimb.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Iterable
+import time
+from typing import Iterable, Mapping
 
-import jax
+import numpy as np
 
-from repro.core import hlo_counter as _hc
 from repro.core import predictor as _pred
-from repro.core.hbm import TpuParams, TPU_V5E
+from repro.core.cache import HloAnalysisCache, config_hash
+from repro.core.hbm import AccessClass, TpuParams, Traffic, TPU_V5E
+from repro.core import hbm as _hbm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +41,7 @@ class TrialResult:
     prediction: _pred.StepPrediction
     compile_s: float
     memory_bytes: float | None
+    cached: bool = False
 
     @property
     def t_step(self) -> float:
@@ -52,6 +58,7 @@ class TrialResult:
             "t_collective_ms": p.t_collective * 1e3,
             "mem_gb": (self.memory_bytes or 0) / 1e9,
             "compile_s": self.compile_s,
+            "cached": self.cached,
         }
 
 
@@ -72,13 +79,75 @@ def default_candidates(kind: str) -> list[Candidate]:
     return out
 
 
-def run_trial(cfg, shape, mesh, candidate: Candidate,
-              hw: TpuParams = TPU_V5E) -> TrialResult:
-    """Lower+compile one candidate and predict its step time (no execution)."""
-    import time
+_CODE_FPR: str | None = None
 
+
+def _code_fingerprint() -> str:
+    """Content hash of the source that determines the lowered HLO.
+
+    Editing repro.launch / repro.models / repro.configs changes what
+    build_step compiles for the *same* configuration, so cached analyses
+    must not survive such edits.  Hashing a few dozen small files costs
+    ~1 ms once per process — negligible next to a compile.
+    """
+    global _CODE_FPR
+    if _CODE_FPR is None:
+        import hashlib
+        import pathlib
+
+        import repro
+
+        h = hashlib.sha256()
+        # repro is a namespace package (no __init__.py): use __path__.
+        root = pathlib.Path(next(iter(repro.__path__)))
+        for sub in ("launch", "models", "configs"):
+            for p in sorted((root / sub).glob("*.py")):
+                h.update(p.name.encode())
+                h.update(p.read_bytes())
+        _CODE_FPR = h.hexdigest()[:16]
+    return _CODE_FPR
+
+
+def candidate_key(cfg, shape, mesh, candidate: Candidate) -> str:
+    """Config hash identifying one (model, shape, mesh, candidate) compile.
+
+    Salted with the jax version (different compiler, different HLO), the
+    analyzer version (different analysis semantics), and a content hash of
+    the step-building source (different program for the same config), so
+    cached records are invalidated when any of them changes.
+    """
+    import jax
+
+    from repro.core.hlo_counter import ANALYZER_VERSION
+
+    return config_hash({
+        "cfg": dataclasses.asdict(cfg),
+        "shape": dataclasses.asdict(shape),
+        "mesh": {"shape": dict(getattr(mesh, "shape", {}) or {}),
+                 "n_devices": getattr(getattr(mesh, "devices", None),
+                                      "size", None)},
+        "candidate": {"overrides": candidate.overrides,
+                      "train_overrides": candidate.train_overrides},
+    }, salt=f"jax-{jax.__version__}-analyzer-{ANALYZER_VERSION}"
+            f"-src-{_code_fingerprint()}")
+
+
+def analyze_candidate(cfg, shape, mesh, candidate: Candidate,
+                      cache: HloAnalysisCache | None = None) -> dict:
+    """Compiled-HLO analysis record for one candidate (cache-aware).
+
+    Returns a JSON-able dict with the trip-count-aware static counts — all
+    the model needs; the HLO text itself is never stored.
+    """
     from repro.core import hlo as HLO
+    from repro.core import hlo_counter as _hc
     from repro.launch.steps import TrainConfig, build_step
+
+    key = candidate_key(cfg, shape, mesh, candidate)
+    if cache is not None:
+        rec = cache.get(key)
+        if rec is not None:
+            return {**rec, "cached": True}
 
     cfg_c = dataclasses.replace(cfg, **candidate.overrides)
     tcfg = TrainConfig(**candidate.train_overrides) \
@@ -87,23 +156,137 @@ def run_trial(cfg, shape, mesh, candidate: Candidate,
     built = build_step(cfg_c, shape, mesh, tcfg)
     compiled = built.fn.lower(*built.args).compile()
     dt = time.time() - t0
-    text = compiled.as_text()
-    pred = _pred.predict(text, HLO.cost_analysis_stats(compiled), hw)
-    mem = HLO.memory_analysis_stats(compiled).get("total_bytes")
-    return TrialResult(candidate=candidate, prediction=pred, compile_s=dt,
-                       memory_bytes=mem)
+    hc = _hc.analyze(compiled.as_text())
+    rec = {
+        "flops": hc.flops,
+        "bytes_by_class": dict(hc.bytes_by_class),
+        "collective_wire_bytes": hc.collective_wire_bytes,
+        "collective_operand_bytes": hc.collective_operand_bytes,
+        "collective_by_kind": dict(hc.collective_by_kind),
+        "n_collectives": hc.n_collectives,
+        "memory_bytes": HLO.memory_analysis_stats(compiled).get("total_bytes"),
+        "xla_cost": HLO.cost_analysis_stats(compiled),
+        "compile_s": dt,
+        "cached": False,
+    }
+    if cache is not None:
+        cache.put(key, rec)
+    return rec
+
+
+def rank_records(records: list[Mapping], hw: TpuParams = TPU_V5E, *,
+                 gather_row_bytes: float = 512.0) -> dict[str, np.ndarray]:
+    """Score N analysis records in one vectorized pass.
+
+    Returns per-candidate arrays: ``t_compute``, ``t_memory``,
+    ``t_collective``, ``t_step`` (overlapped roofline max) and ``order``
+    (argsort of ``t_step``, ascending — the ranking).
+    """
+    n = len(records)
+    class_names = sorted({k for r in records for k in r["bytes_by_class"]})
+    by_class = {}
+    for name in class_names:
+        cls = _pred._CLASS_BY_NAME.get(name, AccessClass.STREAM)
+        arr = np.asarray([float(r["bytes_by_class"].get(name, 0.0))
+                          for r in records])
+        by_class[name] = (cls, arr)
+
+    # Row-granularity differs between stream and non-stream classes exactly
+    # like predictor.components_from_cost: score the two groups separately.
+    t_memory = np.zeros(n)
+    stream = {nm: a for nm, (c, a) in by_class.items()
+              if c is AccessClass.STREAM}
+    other = {nm: (c, a) for nm, (c, a) in by_class.items()
+             if c is not AccessClass.STREAM}
+    if stream:
+        t_memory = t_memory + _hbm.memory_time_batch(
+            {AccessClass.STREAM: sum(stream.values())}, hw, row_bytes=512.0)
+    for _, (cls, arr) in sorted(other.items()):
+        t_memory = t_memory + _hbm.memory_time_batch(
+            {cls: arr}, hw, row_bytes=gather_row_bytes)
+
+    flops = np.asarray([float(r["flops"]) for r in records])
+    wire = np.asarray([float(r["collective_wire_bytes"]) for r in records])
+    n_coll = np.asarray([float(r["n_collectives"]) for r in records])
+    t_compute = flops / hw.peak_flops
+    t_collective = wire / (hw.ici_bw * hw.ici_links) + n_coll * hw.ici_hop_latency
+    t_step = np.maximum(np.maximum(t_compute, t_memory), t_collective)
+    return {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_collective,
+        "t_step": t_step,
+        "order": np.argsort(t_step, kind="stable"),
+    }
+
+
+def _prediction_from(rec: Mapping, scores: dict, i: int,
+                     gather_row_bytes: float) -> _pred.StepPrediction:
+    comps = []
+    for name, b in sorted(rec["bytes_by_class"].items()):
+        cls = _pred._CLASS_BY_NAME.get(name, AccessClass.STREAM)
+        row = gather_row_bytes if cls is not AccessClass.STREAM else 512.0
+        comps.append(Traffic(cls, float(b), row_bytes=row, name=name))
+    return _pred.StepPrediction(
+        t_compute=float(scores["t_compute"][i]),
+        t_memory=float(scores["t_memory"][i]),
+        t_collective=float(scores["t_collective"][i]),
+        memory_components=tuple(comps),
+        flops=float(rec["flops"]),
+        hbm_bytes=float(sum(rec["bytes_by_class"].values())),
+        collective_wire_bytes=float(rec["collective_wire_bytes"]),
+        collective_operand_bytes=float(rec["collective_operand_bytes"]),
+        n_collectives=float(rec["n_collectives"]),
+        collective_by_kind=dict(rec["collective_by_kind"]),
+        xla_cost=dict(rec.get("xla_cost") or {}),
+    )
+
+
+def run_trial(cfg, shape, mesh, candidate: Candidate,
+              hw: TpuParams = TPU_V5E,
+              cache: HloAnalysisCache | None = None) -> TrialResult:
+    """Lower+compile one candidate and predict its step time (no execution)."""
+    rec = analyze_candidate(cfg, shape, mesh, candidate, cache)
+    scores = rank_records([rec], hw)
+    return TrialResult(candidate=candidate,
+                       prediction=_prediction_from(rec, scores, 0, 512.0),
+                       compile_s=float(rec["compile_s"]),
+                       memory_bytes=rec.get("memory_bytes"),
+                       cached=bool(rec.get("cached")))
 
 
 def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
-             hw: TpuParams = TPU_V5E) -> list[TrialResult]:
-    """Rank candidates by predicted step time (ascending)."""
+             hw: TpuParams = TPU_V5E, *,
+             cache: HloAnalysisCache | bool | None = True,
+             gather_row_bytes: float = 512.0) -> list[TrialResult]:
+    """Rank candidates by predicted step time (ascending).
+
+    Per-candidate compiles go through the on-disk analysis cache (pass
+    ``cache=False`` to disable, or an ``HloAnalysisCache`` to control the
+    location); the scoring itself is one batched pass over all candidates.
+    """
+    if cache is True:
+        cache = HloAnalysisCache()
+    elif cache is False:
+        cache = None
     cands = list(candidates) if candidates is not None \
         else default_candidates(shape.kind)
-    results = []
+    kept, records = [], []
     for c in cands:
         try:
-            results.append(run_trial(cfg, shape, mesh, c, hw))
+            records.append(analyze_candidate(cfg, shape, mesh, c, cache))
+            kept.append(c)
         except Exception as e:  # noqa: BLE001 — a failed candidate is data
             print(f"[autotune] {c.name} failed: {type(e).__name__}: {e}")
-    results.sort(key=lambda r: r.t_step)
-    return results
+    if not records:
+        return []
+    scores = rank_records(records, hw, gather_row_bytes=gather_row_bytes)
+    return [
+        TrialResult(candidate=kept[i],
+                    prediction=_prediction_from(records[i], scores, int(i),
+                                                gather_row_bytes),
+                    compile_s=float(records[i]["compile_s"]),
+                    memory_bytes=records[i].get("memory_bytes"),
+                    cached=bool(records[i].get("cached")))
+        for i in scores["order"]
+    ]

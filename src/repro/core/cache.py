@@ -1,0 +1,91 @@
+"""On-disk cache of compiled-HLO cost analyses, keyed by config hash.
+
+Lower+compile is the expensive step of model-guided search (seconds per
+candidate); the analytical scoring is microseconds.  Caching the *analysis*
+(the `HloCost` numbers, not the HLO text) makes re-ranking a design space
+under different hardware parameters, or resuming an interrupted sweep, free.
+
+Records are plain JSON dicts, one file per key, written atomically so
+concurrent autotune runs can share a cache directory.  The key is a SHA-256
+over a canonical JSON encoding of the configuration (plus a cache schema
+version and the jax version, since recompiling under a different compiler
+can change the counts).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+from typing import Any, Mapping
+
+CACHE_VERSION = 1
+
+#: Default cache root; override with the REPRO_CACHE_DIR environment variable.
+DEFAULT_ROOT = os.environ.get(
+    "REPRO_CACHE_DIR", os.path.join("~", ".cache", "repro"))
+
+
+def config_hash(obj: Any, *, salt: str = "") -> str:
+    """Stable hex digest of an arbitrary JSON-encodable configuration.
+
+    Non-JSON values fall back to ``repr`` — good enough for dataclasses,
+    enums and mesh shapes, and stable within a process generation.
+    """
+    blob = json.dumps({"v": CACHE_VERSION, "salt": salt, "obj": obj},
+                      sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+class HloAnalysisCache:
+    """Directory of ``<key>.json`` analysis records."""
+
+    def __init__(self, root: str | os.PathLike | None = None,
+                 namespace: str = "hlo"):
+        base = pathlib.Path(root if root is not None else DEFAULT_ROOT)
+        self.root = base.expanduser() / namespace
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.root / f"{key}.json"
+
+    def get(self, key: str) -> dict | None:
+        try:
+            with open(self._path(key)) as fh:
+                return json.load(fh)
+        except (OSError, ValueError):
+            return None      # missing or corrupt — recompute
+
+    def put(self, key: str, record: Mapping[str, Any]) -> None:
+        self.root.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(dict(record), fh, sort_keys=True, default=repr)
+            os.replace(tmp, self._path(key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __contains__(self, key: str) -> bool:
+        return self._path(key).is_file()
+
+    def __len__(self) -> int:
+        if not self.root.is_dir():
+            return 0
+        return sum(1 for _ in self.root.glob("*.json"))
+
+    def clear(self) -> int:
+        """Delete every record; returns the number removed."""
+        n = 0
+        if self.root.is_dir():
+            for p in self.root.glob("*.json"):
+                try:
+                    p.unlink()
+                    n += 1
+                except OSError:
+                    pass
+        return n

@@ -124,3 +124,47 @@ def traffic_time(t: Traffic, hw: TpuParams = TPU_V5E) -> tuple[float, float]:
 def memory_time(components: list[Traffic], hw: TpuParams = TPU_V5E) -> float:
     """Eq. 1 transplanted: sum of per-class (T_ideal + T_ovh)."""
     return sum(sum(traffic_time(c, hw)) for c in components)
+
+
+def memory_time_batch(bytes_by_class, hw: TpuParams = TPU_V5E, *,
+                      row_bytes: float = 512.0):
+    """Vectorized ``memory_time`` over a batch of compiled steps.
+
+    ``bytes_by_class`` maps an :class:`AccessClass` (or its value string) to
+    an array of useful-byte totals, one entry per step; returns the per-step
+    memory time array.  Matches the scalar ``traffic_time`` sum exactly for
+    the same ``row_bytes`` (the autotune batched ranker relies on this;
+    cross-checked in tests).
+    """
+    import numpy as np
+
+    total = None
+    for cls, nbytes in bytes_by_class.items():
+        if isinstance(cls, str):
+            cls = AccessClass(cls)
+        b = np.asarray(nbytes, dtype=np.float64)
+        t_ideal = b / hw.hbm_bw
+        if cls is AccessClass.VMEM:
+            t_ovh = np.zeros_like(b)
+        elif cls is AccessClass.STREAM:
+            t_ovh = np.maximum(0.0, b / (hw.hbm_bw * hw.k_stream) - t_ideal)
+        else:
+            row = max(1.0, row_bytes)
+            txns_per_row = max(1.0, -(-row // hw.txn_bytes))      # ceil
+            fetched_per_row = txns_per_row * hw.txn_bytes
+            waste = max(0.0, fetched_per_row / row - 1.0)
+            n_txn = (b / row) * txns_per_row
+            if cls is AccessClass.STRIDED:
+                t_ovh = np.maximum(
+                    0.0, (b * waste) / (hw.hbm_bw * hw.k_strided)
+                    + b / (hw.hbm_bw * hw.k_strided) - t_ideal)
+            elif cls is AccessClass.GATHER:
+                t_ovh = ((b * waste) / (hw.hbm_bw * hw.k_gather)
+                         + n_txn * hw.t_row / hw.mlp)
+            else:                                                 # SERIALIZED
+                t_ovh = n_txn * (2.0 * hw.t_row)
+        contrib = t_ideal + np.where(b > 0, t_ovh, 0.0)
+        total = contrib if total is None else total + contrib
+    if total is None:
+        return np.zeros(0, dtype=np.float64)
+    return total

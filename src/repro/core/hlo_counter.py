@@ -33,6 +33,11 @@ from collections import defaultdict
 
 from repro.core.hlo import shape_bytes, COLLECTIVE_KINDS, _collective_from, _group_size
 
+#: Bump whenever the analysis semantics change (opcode coverage, class
+#: mapping, trip-count recovery, ...) so on-disk caches of analyze() output
+#: (core.cache / core.autotune) are invalidated automatically.
+ANALYZER_VERSION = 1
+
 _COMP_HEADER_RE = re.compile(
     r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*.+\{\s*$")
 # NOTE: tuple types may contain /*index=N*/ comments, so the tuple branch

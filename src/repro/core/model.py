@@ -36,6 +36,13 @@ validated against the paper's own numbers in tests/benchmarks):
   ``T_ovh += ls_acc * (dq*bl - ls_bytes) / bw_mem``.
 * Atomic Eq. 10 gives a *per-operation* overhead; the LSU total is
   ``ls_acc`` times that (Fig. 4d shows time linear in #ga).
+
+The heavy lifting lives in :mod:`repro.core.model_batch`, an array-based
+restatement of the same equations that scores whole design spaces in one
+vectorized pass (see :mod:`repro.core.sweep`).  ``estimate`` below is a thin
+scalar wrapper over that core; ``lsu_timing`` is kept as the readable scalar
+reference implementation and is cross-checked against the array core in the
+tests.
 """
 from __future__ import annotations
 
@@ -177,29 +184,47 @@ def estimate(
     *,
     f: int = 1,
 ) -> KernelEstimate:
-    """Full model: Eq. 3 classification + Eq. 1 execution time."""
+    """Full model: Eq. 3 classification + Eq. 1 execution time.
+
+    Thin scalar wrapper over the array core: each LSU runs through the same
+    `model_batch.group_timing` math, on plain Python scalars (the
+    `SCALAR_XP` namespace shim keeps the call as cheap as the old scalar
+    code).  Use `repro.core.sweep` to score thousands of design points in
+    one vectorized pass of the identical equations.
+    """
+    from repro.core import model_batch as _mb
+
     glob = [l for l in lsus if l.lsu_type.is_global]
     if not glob:
         return KernelEstimate(t_exe=0.0, memory_bound=False, bound_ratio=0.0,
                               per_lsu=())
-    ratio = memory_bound_ratio(glob, dram)
-    timings = tuple(
-        lsu_timing(l, dram, bsp, n_lsu=len(glob), f=f) for l in glob
-    )
-    t_exe = sum(t.t_total for t in timings)                 # Eq. 1
-    # Write-ACK / atomic kernels are *latency*-bound at the memory even when
-    # their request width is narrow (the paper models NW and the atomic
-    # microbenchmarks as memory bound; their serialization happens in the
-    # GMI, not the kernel pipeline).
-    latency_bound = any(
-        l.lsu_type in (LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED)
-        for l in glob
-    )
+    t_exe = 0.0
+    ratio = 0.0
+    latency_bound = False
+    timings = []
+    for l in glob:
+        g = _mb.group_timing(
+            lsu_type=_mb.TYPE_CODE[l.lsu_type],
+            ls_width=l.ls_width, ls_acc=l.ls_acc, ls_bytes=l.ls_bytes,
+            delta=l.delta, val_constant=l.val_constant,
+            n_lsu=len(glob), f=f,
+            dq=dram.dq, bl=dram.bl, f_mem=dram.f_mem,
+            t_rcd=dram.t_rcd, t_rp=dram.t_rp, t_wr=dram.t_wr,
+            burst_cnt=bsp.burst_cnt, max_th=bsp.max_th,
+            xp=_mb.SCALAR_XP,
+        )
+        timings.append(LsuTiming(lsu=l, burst_size=float(g["burst_size"]),
+                                 n_bursts=float(g["n_bursts"]),
+                                 t_ideal=float(g["t_ideal"]),
+                                 t_ovh=float(g["t_ovh"])))
+        t_exe += g["t_total"]                               # Eq. 1
+        ratio += g["ratio_term"]                            # Eq. 3 LHS
+        latency_bound = latency_bound or bool(g["latency_bound"])
     return KernelEstimate(
-        t_exe=t_exe,
+        t_exe=float(t_exe),
         memory_bound=ratio >= 1.0 or latency_bound,
-        bound_ratio=ratio,
-        per_lsu=timings,
+        bound_ratio=float(ratio),
+        per_lsu=tuple(timings),
     )
 
 

@@ -1,0 +1,356 @@
+"""Vectorized design-space sweeps over the paper's analytical model.
+
+The paper's pitch is *fast* exploration: the closed-form Eqs. 1-10 exist so
+thousands of candidate designs can be scored without building any of them.
+This module turns the array core (:mod:`repro.core.model_batch`) into that
+workflow: describe a design space over the SIV microbenchmark knobs — LSU
+type, number of global accesses, SIMD width, input size, stride, element
+size, DRAM part, BSP variant — and score every point in one pass.
+
+    >>> from repro.core.sweep import sweep_grid
+    >>> res = sweep_grid(lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_WRITE_ACK],
+    ...                  n_ga=[1, 2, 4], simd=[1, 4, 16],
+    ...                  delta=[1, 2, 4], dram=[DDR4_1866, DDR4_2666])
+    >>> best = res.top_k(5)
+    >>> front = res.pareto()          # time vs interconnect-width cost
+
+Every design point maps to exactly the LSU list `apps.microbench` would
+build, so batched results match the scalar ``estimate(microbench(...))``
+path element-wise (tested to rtol 1e-6 in tests/test_sweep.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core import model_batch as _mb
+from repro.core.fpga import BspParams, DramParams, DDR4_1866, STRATIX10_BSP
+from repro.core.lsu import LsuType
+
+#: Sweepable axes, in canonical order.  ``lsu_type``/``dram``/``bsp`` are
+#: categorical; the rest are numeric.
+AXES = ("lsu_type", "n_ga", "simd", "n_elems", "delta", "elem_bytes",
+        "include_write", "val_constant", "dram", "bsp")
+
+_CATEGORICAL = {"lsu_type", "dram", "bsp"}
+
+
+def _as_list(v) -> list:
+    if isinstance(v, (list, tuple)):
+        return list(v)
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    return [v]
+
+
+def pareto_front(values: np.ndarray) -> np.ndarray:
+    """Indices of the Pareto-minimal rows of ``values`` [N, d].
+
+    A row dominates another if it is <= in every objective and < in at least
+    one.  Duplicated non-dominated rows are all kept.  The returned indices
+    are sorted ascending, and the *set* of selected points is invariant under
+    any permutation of the input rows.
+    """
+    vals = np.asarray(values, dtype=np.float64)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    n = len(vals)
+    if n == 0:
+        return np.empty(0, dtype=np.int64)
+    # Lexicographic order makes any dominator of row i appear before i, so a
+    # single forward scan against the kept front is complete.
+    order = np.lexsort(tuple(vals[:, d] for d in range(vals.shape[1] - 1, -1, -1)))
+    front_vals: list[np.ndarray] = []
+    keep: list[int] = []
+    fv = np.empty((0, vals.shape[1]))
+    for idx in order:
+        v = vals[idx]
+        if len(keep):
+            dominated = np.any((fv <= v).all(axis=1) & (fv < v).any(axis=1))
+            if dominated:
+                continue
+        keep.append(int(idx))
+        front_vals.append(v)
+        fv = np.asarray(front_vals)
+    return np.asarray(sorted(keep), dtype=np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Scored design space: per-point config values + batched model output."""
+
+    points: dict[str, np.ndarray]     # axis -> per-point values [N]
+    estimate: _mb.BatchEstimate
+    resource: np.ndarray              # total LSU interconnect width [B] per point
+
+    @property
+    def n_points(self) -> int:
+        return int(len(self.resource))
+
+    @property
+    def t_exe(self) -> np.ndarray:
+        return np.asarray(self.estimate.t_exe)
+
+    @property
+    def memory_bound(self) -> np.ndarray:
+        return np.asarray(self.estimate.memory_bound)
+
+    @property
+    def effective_bandwidth(self) -> np.ndarray:
+        return np.asarray(self.estimate.effective_bandwidth)
+
+    def pareto(self, objectives: Sequence[Any] | None = None) -> np.ndarray:
+        """Indices of the Pareto front, minimizing every objective.
+
+        Default objectives: predicted time vs. total LSU width (the
+        interconnect/resource cost of the design).  Pass an explicit list of
+        arrays or names in (``t_exe``, ``resource``, ``bound_ratio``,
+        ``total_bytes``) to change the trade-off.
+        """
+        if objectives is None:
+            objectives = ["t_exe", "resource"]
+        cols = []
+        for obj in objectives:
+            if isinstance(obj, str):
+                if obj == "t_exe":
+                    cols.append(self.t_exe)
+                elif obj == "resource":
+                    cols.append(self.resource)
+                elif obj == "bound_ratio":
+                    cols.append(np.asarray(self.estimate.bound_ratio))
+                elif obj == "total_bytes":
+                    cols.append(np.asarray(self.estimate.total_bytes))
+                else:
+                    raise KeyError(f"unknown objective {obj!r}")
+            else:
+                cols.append(np.asarray(obj, dtype=np.float64))
+        return pareto_front(np.stack(cols, axis=1))
+
+    def top_k(self, k: int = 10, key: str = "t_exe") -> list[dict]:
+        """The ``k`` best rows by ``key`` (ascending), as config dicts."""
+        vals = {"t_exe": self.t_exe, "resource": self.resource}[key] \
+            if key in ("t_exe", "resource") else np.asarray(getattr(self.estimate, key))
+        idx = np.argsort(vals, kind="stable")[:k]
+        return self.rows(idx)
+
+    def rows(self, indices: Sequence[int] | None = None) -> list[dict]:
+        """CSV-ready dict rows for the selected (default: all) points."""
+        est = self.estimate
+        ebw = self.effective_bandwidth
+        if indices is None:
+            indices = range(self.n_points)
+        out = []
+        for i in indices:
+            i = int(i)
+            row = {}
+            for name, vals in self.points.items():
+                v = vals[i]
+                if name == "lsu_type":
+                    v = LsuType(v).value if not isinstance(v, LsuType) else v.value
+                elif name == "bsp":
+                    v = _bsp_name(v)
+                elif name == "dram":
+                    v = getattr(v, "name", repr(v))
+                elif isinstance(v, (np.integer, np.bool_)):
+                    v = v.item()
+                row[name] = v
+            row.update(
+                t_exe_ms=float(est.t_exe[i]) * 1e3,
+                t_ovh_ms=float(est.t_ovh[i]) * 1e3,
+                bound_ratio=float(est.bound_ratio[i]),
+                memory_bound=bool(est.memory_bound[i]),
+                eff_bw_gbs=float(ebw[i]) / 1e9,
+                resource_bytes=float(self.resource[i]),
+            )
+            out.append(row)
+        return out
+
+
+def _bsp_name(b: BspParams) -> str:
+    return f"bsp(burst_cnt={b.burst_cnt},max_th={b.max_th})"
+
+
+def _factorize(objs) -> tuple[list, np.ndarray]:
+    """(unique objects, per-row codes) — attribute extraction then runs per
+    unique value instead of per design point (the batched-path hotspot)."""
+    table: list = []
+    index: dict[int, int] = {}
+    codes = np.empty(len(objs), dtype=np.int64)
+    for i, o in enumerate(objs):
+        j = index.get(id(o))
+        if j is None:
+            j = index[id(o)] = len(table)
+            table.append(o)
+        codes[i] = j
+    return table, codes
+
+
+def _build(points: dict[str, np.ndarray], n: int,
+           cats: dict[str, tuple[list, np.ndarray]] | None = None) -> SweepResult:
+    """Score ``n`` design points described by per-point axis arrays.
+
+    Each point expands to the LSU list ``apps.microbench`` would build,
+    expressed as at most two homogeneous LSU *groups* per point:
+
+    * burst-coalesced aligned/non-aligned/cache: one group of
+      ``n_ga + include_write`` identical LSUs;
+    * write-ACK: a group of ``n_ga`` aligned reads plus a group of ``simd``
+      scalar ACK stores (the compiler replicates the store LSU);
+    * atomic: a group of ``n_ga`` atomic units (stride is always 1).
+    """
+    cats = cats or {}
+
+    def _cat(name):
+        if name in cats:
+            return cats[name]
+        return _factorize(points[name])
+
+    type_table, type_idx = _cat("lsu_type")
+    type_codes = np.asarray([_mb.TYPE_CODE[t] for t in type_table],
+                            dtype=np.int64)[type_idx]
+    n_ga = np.asarray(points["n_ga"], dtype=np.int64)
+    simd = np.asarray(points["simd"], dtype=np.int64)
+    n_elems = np.asarray(points["n_elems"], dtype=np.int64)
+    delta = np.asarray(points["delta"], dtype=np.int64)
+    elem_bytes = np.asarray(points["elem_bytes"], dtype=np.int64)
+    include_write = np.asarray(points["include_write"], dtype=bool)
+    val_constant = np.asarray(points["val_constant"], dtype=bool)
+    dram_table, dram_idx = _cat("dram")
+    bsp_table, bsp_idx = _cat("bsp")
+
+    if np.any(n_ga < 1) or np.any(simd < 1) or np.any(delta < 1):
+        raise ValueError("n_ga, simd and delta must be >= 1")
+    if np.any(n_elems % simd):
+        raise ValueError("n_elems must be divisible by simd at every point")
+
+    is_atomic = type_codes == _mb.ATOMIC
+    is_ack = type_codes == _mb.WRITE_ACK
+
+    # Normalize axes that are inert for a type (stride for ACK/atomic,
+    # val_constant for non-atomics) so reported configs describe exactly
+    # what was scored; grid products over inert axes thus show up as
+    # *visibly* identical rows rather than phantom distinct designs.
+    delta = np.where(is_atomic | is_ack, 1, delta)
+    val_constant = val_constant & is_atomic
+    points = {**points, "delta": delta, "val_constant": val_constant}
+
+    # Group 1: the read side (plus the same-type write for plain BC types).
+    g1_type = np.where(is_ack, _mb.ALIGNED, type_codes)
+    g1_count = np.where(is_atomic | is_ack, n_ga, n_ga + include_write)
+    g1_width = np.where(is_atomic, elem_bytes, simd * elem_bytes)
+    g1_acc = np.where(is_atomic, n_elems, n_elems // simd)
+    g1_delta = delta                      # already normalized above
+
+    # Group 2: the replicated write-ACK store LSUs (count 0 elsewhere).
+    g2_count = np.where(is_ack & include_write, simd, 0)
+
+    kernel = np.concatenate([np.arange(n), np.arange(n)])
+    vec = np.concatenate
+    dram_f = {k: np.asarray([getattr(d, k) for d in dram_table])[dram_idx]
+              for k in ("dq", "bl", "f_mem", "t_rcd", "t_rp", "t_wr")}
+    bsp_f = {k: np.asarray([getattr(b, k) for b in bsp_table])[bsp_idx]
+             for k in ("burst_cnt", "max_th")}
+
+    batch = _mb.GroupBatch(
+        kernel=kernel,
+        n_kernels=n,
+        count=vec([g1_count, g2_count]),
+        lsu_type=vec([g1_type, np.full(n, _mb.WRITE_ACK, dtype=np.int64)]),
+        ls_width=vec([g1_width, elem_bytes]),
+        ls_acc=vec([g1_acc, n_elems // simd]),
+        ls_bytes=vec([g1_width, elem_bytes]),
+        delta=vec([g1_delta, np.ones(n, dtype=np.int64)]),
+        val_constant=vec([val_constant, np.zeros(n, dtype=bool)]),
+        f=vec([simd, simd]),
+        **{k: vec([v, v]) for k, v in {**dram_f, **bsp_f}.items()},
+    )
+    est = _mb.estimate_batch(batch)
+    resource = np.bincount(kernel,
+                           weights=np.asarray(batch.count * batch.ls_width,
+                                              dtype=np.float64),
+                           minlength=n)
+    return SweepResult(points=points, estimate=est, resource=resource)
+
+
+def _normalize_axes(overrides: Mapping[str, Any]) -> dict[str, list]:
+    defaults = {
+        "lsu_type": LsuType.BC_ALIGNED,
+        "n_ga": 1,
+        "simd": 16,
+        "n_elems": 1 << 22,
+        "delta": 1,
+        "elem_bytes": 4,
+        "include_write": True,
+        "val_constant": False,
+        "dram": DDR4_1866,
+        "bsp": STRATIX10_BSP,
+    }
+    unknown = set(overrides) - set(AXES)
+    if unknown:
+        raise KeyError(f"unknown sweep axes: {sorted(unknown)}")
+    return {k: _as_list(overrides.get(k, defaults[k])) for k in AXES}
+
+
+def sweep_grid(**axes) -> SweepResult:
+    """Score the full Cartesian product of the given axes in one pass.
+
+    Every axis (see ``AXES``) accepts a single value or a sequence; e.g.
+    ``sweep_grid(n_ga=[1, 2, 4], simd=[1, 16], dram=[DDR4_1866, DDR4_2666])``
+    scores 12 design points.  Stride applies to the burst-coalesced
+    aligned/non-aligned types only (write-ACK reads and atomics are stride-1
+    by construction, exactly like ``apps.microbench``).
+    """
+    lists = _normalize_axes(axes)
+    sizes = [len(v) for v in lists.values()]
+    n = int(np.prod(sizes))
+    if n == 0:
+        raise ValueError("empty sweep: every axis needs at least one value")
+    grids = np.meshgrid(*[np.arange(s) for s in sizes], indexing="ij")
+    points: dict[str, np.ndarray] = {}
+    cats: dict[str, tuple[list, np.ndarray]] = {}
+    for (name, vals), g in zip(lists.items(), grids):
+        idx = g.reshape(-1)
+        if name in _CATEGORICAL:
+            points[name] = np.asarray(vals, dtype=object)[idx]
+            cats[name] = (vals, idx)
+        else:
+            points[name] = np.asarray(vals)[idx]
+    return _build(points, n, cats)
+
+
+def sweep_random(n: int, *, seed: int = 0, **axes) -> SweepResult:
+    """Score ``n`` uniformly sampled design points.
+
+    Numeric axes given as a 2-tuple ``(lo, hi)`` are sampled as integers in
+    the inclusive range; any axis given as a list is sampled uniformly from
+    it; scalars are held fixed.  ``n_elems`` samples are rounded down to a
+    multiple of the LCM of the sampled ``simd`` values (floored at the LCM
+    itself) so every point stays divisible by its own ``simd``.
+    """
+    rng = np.random.default_rng(seed)
+    tuples = {k: v for k, v in axes.items()
+              if isinstance(v, tuple) and len(v) == 2
+              and k not in _CATEGORICAL and not isinstance(v[0], (LsuType,))}
+    lists = _normalize_axes({k: v for k, v in axes.items() if k not in tuples})
+
+    points: dict[str, np.ndarray] = {}
+    cats: dict[str, tuple[list, np.ndarray]] = {}
+    for name in AXES:
+        if name in tuples:
+            lo, hi = tuples[name]
+            points[name] = rng.integers(int(lo), int(hi) + 1, size=n)
+        else:
+            vals = lists[name]
+            idx = rng.integers(0, len(vals), size=n)
+            if name in _CATEGORICAL:
+                points[name] = np.asarray(vals, dtype=object)[idx]
+                cats[name] = (vals, idx)
+            else:
+                points[name] = np.asarray(vals)[idx]
+    lcm = int(np.lcm.reduce(np.unique(points["simd"]).astype(np.int64)))
+    points["n_elems"] = np.maximum(
+        (np.asarray(points["n_elems"], dtype=np.int64) // lcm) * lcm, lcm)
+    return _build(points, n, cats)

@@ -1,12 +1,16 @@
 """Property-based cross-validation: closed-form model vs the event-driven
 DRAM simulator oracle (the board substitute — DESIGN.md S5)."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
 
-from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, estimate
-from repro.core.apps import microbench
-from repro.core.dramsim import simulate
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')")
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, estimate  # noqa: E402
+from repro.core.apps import microbench  # noqa: E402
+from repro.core.dramsim import simulate  # noqa: E402
+
+pytestmark = pytest.mark.slow
 
 settings = hypothesis.settings(max_examples=30, deadline=None)
 

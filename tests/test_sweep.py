@@ -1,0 +1,258 @@
+"""Sweep-engine tests: batched == scalar element-wise, Pareto invariants,
+the >= 20x exploration-scale speedup, and the batched autotune scorer."""
+import numpy as np
+import pytest
+
+from repro.core import (DDR4_1866, DDR4_2666, Lsu, LsuType, STRATIX10_BSP,
+                        estimate)
+from repro.core import model as M
+from repro.core import model_batch as MB
+from repro.core.apps import microbench
+from repro.core.fpga import BspParams
+from repro.core.sweep import pareto_front, sweep_grid, sweep_random
+
+ALL_TYPES = [LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+             LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED]
+STRIDE_TYPES = (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED, LsuType.BC_CACHE)
+
+
+def scalar_point(P, i):
+    """Score design point ``i`` of a SweepResult through the scalar path."""
+    t = P["lsu_type"][i]
+    lsus = microbench(
+        t,
+        n_ga=int(P["n_ga"][i]),
+        simd=int(P["simd"][i]),
+        n_elems=int(P["n_elems"][i]),
+        delta=int(P["delta"][i]) if t in STRIDE_TYPES else 1,
+        elem_bytes=int(P["elem_bytes"][i]),
+        include_write=bool(P["include_write"][i]),
+        val_constant=bool(P["val_constant"][i]),
+    )
+    return estimate(lsus, P["dram"][i], P["bsp"][i], f=int(P["simd"][i]))
+
+
+class TestBatchedMatchesScalar:
+    def test_grid_elementwise(self):
+        """Mixed-type grid: t_exe, bound ratio and classification all agree
+        with the scalar estimate path at every point."""
+        res = sweep_grid(
+            lsu_type=ALL_TYPES,
+            n_ga=[1, 2, 4],
+            simd=[1, 4, 16],
+            n_elems=[1 << 14, 1 << 16],
+            delta=[1, 2, 6, 7],            # both sides of the Eq. 8 knee
+            include_write=[False, True],
+            val_constant=[False, True],
+            dram=[DDR4_1866, DDR4_2666],
+            bsp=[STRATIX10_BSP, BspParams(burst_cnt=5, max_th=64)],
+        )
+        est = res.estimate
+        for i in range(res.n_points):
+            e = scalar_point(res.points, i)
+            assert res.t_exe[i] == pytest.approx(e.t_exe, rel=1e-6), i
+            assert float(est.bound_ratio[i]) == pytest.approx(
+                e.bound_ratio, rel=1e-9), i
+            assert bool(est.memory_bound[i]) == e.memory_bound, i
+            assert float(est.total_bytes[i]) == e.total_bytes, i
+
+    def test_random_sweep_property(self):
+        """Randomized design points (the property test): batched == scalar."""
+        res = sweep_random(
+            512, seed=1234,
+            lsu_type=ALL_TYPES,
+            n_ga=(1, 8),
+            simd=[1, 2, 4, 8, 16],
+            n_elems=(1 << 12, 1 << 20),
+            delta=(1, 9),
+            include_write=[False, True],
+            val_constant=[False, True],
+            dram=[DDR4_1866, DDR4_2666],
+        )
+        scalar = np.array([scalar_point(res.points, i).t_exe
+                           for i in range(res.n_points)])
+        np.testing.assert_allclose(res.t_exe, scalar, rtol=1e-6)
+
+    def test_group_counts_match_expanded_lsus(self):
+        """A group of `count` identical LSUs == the same LSUs listed out."""
+        lsus = microbench(LsuType.BC_ALIGNED, n_ga=4, simd=8, n_elems=1 << 16)
+        batch = MB.GroupBatch.from_kernels([lsus], DDR4_1866, STRATIX10_BSP)
+        grouped = MB.GroupBatch(
+            kernel=np.array([0]), n_kernels=1,
+            count=np.array([len(lsus)]),
+            lsu_type=batch.lsu_type[:1], ls_width=batch.ls_width[:1],
+            ls_acc=batch.ls_acc[:1], ls_bytes=batch.ls_bytes[:1],
+            delta=batch.delta[:1], val_constant=batch.val_constant[:1],
+            f=batch.f[:1], dq=batch.dq[:1], bl=batch.bl[:1],
+            f_mem=batch.f_mem[:1], t_rcd=batch.t_rcd[:1],
+            t_rp=batch.t_rp[:1], t_wr=batch.t_wr[:1],
+            burst_cnt=batch.burst_cnt[:1], max_th=batch.max_th[:1])
+        a = MB.estimate_batch(batch)
+        b = MB.estimate_batch(grouped)
+        assert float(a.t_exe[0]) == pytest.approx(float(b.t_exe[0]), rel=1e-12)
+        assert int(a.n_lsu[0]) == int(b.n_lsu[0]) == len(lsus)
+
+    def test_scalar_reference_lsu_timing_matches_array_core(self):
+        """model.lsu_timing (readable scalar reference) == model_batch."""
+        cases = [
+            Lsu(LsuType.BC_ALIGNED, ls_width=64, ls_acc=4096, ls_bytes=64),
+            Lsu(LsuType.BC_NON_ALIGNED, ls_width=64, ls_acc=4096,
+                ls_bytes=64, delta=7),
+            Lsu(LsuType.BC_WRITE_ACK, ls_width=4, ls_acc=4096, ls_bytes=4,
+                is_write=True),
+            Lsu(LsuType.ATOMIC_PIPELINED, ls_width=4, ls_acc=4096,
+                ls_bytes=4, is_write=True, val_constant=True),
+        ]
+        for n_lsu in (1, 3):
+            for lsu in cases:
+                ref = M.lsu_timing(lsu, DDR4_1866, STRATIX10_BSP,
+                                   n_lsu=n_lsu, f=8)
+                batch = MB.GroupBatch.from_kernels(
+                    [[lsu] * n_lsu], DDR4_1866, STRATIX10_BSP, f=8)
+                got = MB.estimate_batch(batch).groups
+                assert float(got["t_ideal"][0]) == pytest.approx(
+                    ref.t_ideal, rel=1e-12)
+                assert float(got["t_ovh"][0]) == pytest.approx(
+                    ref.t_ovh, rel=1e-12, abs=1e-18)
+                assert float(got["burst_size"][0]) == pytest.approx(
+                    ref.burst_size, rel=1e-12)
+
+    def test_jax_jit_path(self):
+        """The array core is a pytree and runs under jax.jit unchanged."""
+        jax = pytest.importorskip("jax")
+        import dataclasses
+
+        import jax.numpy as jnp
+
+        batch = MB.GroupBatch.from_kernels(
+            [microbench(LsuType.BC_ALIGNED, n_ga=2),
+             microbench(LsuType.ATOMIC_PIPELINED, n_ga=2, n_elems=1 << 12)],
+            DDR4_1866, STRATIX10_BSP)
+        ref = MB.estimate_batch(batch)
+        jbatch = MB.GroupBatch(**{
+            f.name: (jnp.asarray(getattr(batch, f.name))
+                     if f.name != "n_kernels" else batch.n_kernels)
+            for f in dataclasses.fields(MB.GroupBatch)})
+        assert MB.enable_jax()      # pytree registration is lazy, not at import
+        fn = jax.jit(lambda b: MB.estimate_batch(b, xp=jnp).t_exe)
+        np.testing.assert_allclose(np.asarray(fn(jbatch)), ref.t_exe,
+                                   rtol=1e-6)
+
+    def test_empty_and_onchip_kernels(self):
+        """Kernels with no global LSUs estimate to zero, like the scalar path."""
+        onchip = Lsu(LsuType.PIPELINED, ls_width=4, ls_acc=16, ls_bytes=4)
+        batch = MB.GroupBatch.from_kernels(
+            [[], [onchip], microbench(LsuType.BC_ALIGNED, n_ga=1)],
+            DDR4_1866, STRATIX10_BSP)
+        est = MB.estimate_batch(batch)
+        assert est.t_exe[0] == 0.0 and est.t_exe[1] == 0.0
+        assert est.t_exe[2] > 0.0
+        assert not bool(est.memory_bound[0])
+
+
+class TestPareto:
+    def test_order_invariant(self):
+        rng = np.random.default_rng(7)
+        vals = rng.random((400, 2))
+        vals[rng.integers(0, 400, 40)] = vals[rng.integers(0, 400, 40)]  # dups
+        base = pareto_front(vals)
+        base_set = {tuple(vals[i]) for i in base}
+        for seed in range(5):
+            perm = np.random.default_rng(seed).permutation(len(vals))
+            idx = pareto_front(vals[perm])
+            assert {tuple(vals[perm][i]) for i in idx} == base_set
+
+    def test_front_is_nondominated_and_complete(self):
+        rng = np.random.default_rng(3)
+        vals = rng.random((200, 3))
+        front = set(pareto_front(vals).tolist())
+        dominated = {
+            j
+            for j in range(len(vals))
+            for i in range(len(vals))
+            if i != j and np.all(vals[i] <= vals[j]) and np.any(vals[i] < vals[j])
+        }
+        assert front == set(range(len(vals))) - dominated
+
+    def test_sweep_pareto_objectives(self):
+        res = sweep_grid(lsu_type=ALL_TYPES, n_ga=[1, 2, 4], simd=[1, 4, 16])
+        front = res.pareto()
+        assert len(front) >= 1
+        # every front point must be non-dominated in (t_exe, resource)
+        vals = np.stack([res.t_exe, res.resource], axis=1)
+        for i in front:
+            dom = np.all(vals <= vals[i], axis=1) & np.any(vals < vals[i], axis=1)
+            assert not dom.any()
+
+
+class TestExplorationScale:
+    def test_10k_points_20x_faster_than_scalar(self):
+        """Acceptance: >= 10k designs, >= 20x over the scalar loop, rtol 1e-6."""
+        from benchmarks.sweep_bench import FULL_AXES, scalar_loop
+        import time
+
+        t_batch = float("inf")      # min-of-3 damps scheduler noise
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = sweep_grid(**FULL_AXES)
+            t_batch = min(t_batch, time.perf_counter() - t0)
+        assert res.n_points >= 10_000
+
+        t0 = time.perf_counter()
+        scalar = scalar_loop(res)
+        t_scalar = time.perf_counter() - t0
+
+        np.testing.assert_allclose(res.t_exe, scalar, rtol=1e-6)
+        assert t_scalar / t_batch >= 20.0, (t_scalar, t_batch)
+
+
+class TestBatchedAutotuneScorer:
+    def test_rank_records_matches_scalar_predictor(self):
+        """The batched ranker reproduces predictor.predict's roofline terms."""
+        from repro.core import autotune as AT
+        from repro.core import hbm as _hbm
+        from repro.core.hbm import AccessClass, TPU_V5E, Traffic
+        from repro.core import predictor as _pred
+
+        rng = np.random.default_rng(5)
+        records = []
+        for _ in range(32):
+            records.append({
+                "flops": float(rng.uniform(1e9, 1e15)),
+                "bytes_by_class": {
+                    "stream": float(rng.uniform(0, 1e12)),
+                    "strided": float(rng.uniform(0, 1e10)),
+                    "gather": float(rng.uniform(0, 1e9)),
+                    "serialized": float(rng.choice([0.0, 1e6])),
+                },
+                "collective_wire_bytes": float(rng.uniform(0, 1e10)),
+                "collective_operand_bytes": 0.0,
+                "collective_by_kind": {},
+                "n_collectives": float(rng.integers(0, 64)),
+            })
+        scores = AT.rank_records(records, TPU_V5E)
+        for i, rec in enumerate(records):
+            comps = [Traffic(_pred._CLASS_BY_NAME[k], v,
+                             row_bytes=512.0, name=k)
+                     for k, v in sorted(rec["bytes_by_class"].items())]
+            t_mem = _hbm.memory_time(comps, TPU_V5E)
+            assert scores["t_memory"][i] == pytest.approx(t_mem, rel=1e-9)
+            assert scores["t_compute"][i] == pytest.approx(
+                rec["flops"] / TPU_V5E.peak_flops, rel=1e-12)
+        order = scores["order"]
+        assert (np.diff(scores["t_step"][order]) >= 0).all()
+
+    def test_cache_roundtrip(self, tmp_path):
+        from repro.core.cache import HloAnalysisCache, config_hash
+
+        cache = HloAnalysisCache(tmp_path)
+        key = config_hash({"cfg": {"d_model": 512}, "mesh": (2, 2)})
+        assert cache.get(key) is None
+        rec = {"flops": 1.5e12, "bytes_by_class": {"stream": 3.0}}
+        cache.put(key, rec)
+        assert cache.get(key) == rec
+        assert key in cache and len(cache) == 1
+        # same content -> same key; different content -> different key
+        assert key == config_hash({"cfg": {"d_model": 512}, "mesh": (2, 2)})
+        assert key != config_hash({"cfg": {"d_model": 513}, "mesh": (2, 2)})
+        assert cache.clear() == 1 and len(cache) == 0
