@@ -133,12 +133,43 @@ def table5_comparison() -> list[dict]:
     return rows
 
 
+def table6_kernel_validation() -> list[dict]:
+    """Beyond-paper Table VI: measured vs predicted time per Pallas kernel.
+
+    The paper's Table IV/V error-table shape applied to this repo's own
+    kernels: bandwidth + host-factor calibration on the stream anchor, then
+    per-kernel |measured - predicted| errors (`repro.core.validate`).  Runs
+    in interpret mode on CPU, compiled on accelerators; jax is imported
+    lazily so the numpy-only tables stay jax-free, and a jax-less install
+    gets a placeholder row instead of a crashed benchmark run.
+    """
+    from repro.core.validate import validate
+
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return [{"kernel": "(all)", "backend": "-", "interpret": "-",
+                 "measured_ms": "-", "predicted_ms": "-", "bytes_mb": "-",
+                 "flops_m": "-", "memory_bound": "-",
+                 "err_pct": "error: jax not installed"}]
+
+    rep = validate()
+    rows = rep.rows()
+    for f in rep.failures:
+        rows.append({"kernel": f["kernel"], "backend": "-", "interpret": "-",
+                     "measured_ms": "-", "predicted_ms": "-", "bytes_mb": "-",
+                     "flops_m": "-", "memory_bound": "-",
+                     "err_pct": f"error: {f['error']}"})
+    return rows
+
+
 ALL = {
     "fig3_membound": fig3_membound,
     "fig4_lsu_microbench": fig4_lsu_microbench,
     "fig5_stride": fig5_stride,
     "table4_applications": table4_applications,
     "table5_comparison": table5_comparison,
+    "table6_kernel_validation": table6_kernel_validation,
 }
 
 

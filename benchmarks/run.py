@@ -140,6 +140,11 @@ def _derive(name: str, rows: list[dict]) -> str:
         r = rows[0]
         return (f"points={r['n_points']} speedup={r['speedup']}x "
                 f"agree={r['agree_rtol_1e6']} pareto={r['pareto_points']}")
+    if name == "table6_kernel_validation":
+        errs = [r["err_pct"] for r in rows if isinstance(r["err_pct"], float)]
+        fails = len(rows) - len(errs)
+        return (f"kernels={len(errs)} max_err={max(errs, default=0):.1f}% "
+                f"failures={fails} (measured vs Eqs. 1-10, calibrated)")
     return f"rows={len(rows)}"
 
 

@@ -9,8 +9,13 @@ drives the vectorized sweep engine over thousands of LSU/SIMD/stride/DRAM
 design points, printing the fastest configurations and the Pareto front of
 predicted time vs interconnect resource use.
 
+Finally closes the loop: ``--validate`` (also run by default) measures the
+Pallas kernels and scores the analytical model against the measurement
+(`repro.core.validate`), printing the paper-style error table.
+
 Run:  python examples/membound_explorer.py   (src/ is bootstrapped if not
-installed; pass --sweep-only to skip the jax compilation part)
+installed; pass --sweep-only to skip the jax compilation part, --validate
+for just the measured-vs-predicted table)
 """
 import pathlib
 import sys
@@ -64,6 +69,26 @@ def sweep_demo() -> None:
             break
 
 
+def validate_demo() -> None:
+    """Close the loop: measure the Pallas kernels and score the analytical
+    model against the measurements (paper-style error table)."""
+    from repro.core.validate import validate
+
+    rep = validate()
+    print(f"\nMeasured-vs-predicted validation "
+          f"(backend={rep.results[0].backend if rep.results else '?'}, "
+          f"stream anchor {rep.measured_bw / 1e9:.1f} GB/s, "
+          f"host factor {rep.calibration_factor:.3g}):")
+    print(f"  {'kernel':>18s} {'measured':>10s} {'predicted':>10s} "
+          f"{'bytes':>9s} {'err':>7s}")
+    for r in rep.results:
+        print(f"  {r.name:>18s} {r.measured_s * 1e3:9.3f}ms "
+              f"{r.predicted_s * 1e3:9.3f}ms {r.bytes_moved / 1e6:7.2f}MB "
+              f"{r.err_pct:6.1f}%")
+    for f in rep.failures:
+        print(f"  {f['kernel']:>18s}  FAILED: {f['error']}")
+
+
 def explain(name: str, fn, *specs) -> None:
     import jax
 
@@ -111,10 +136,13 @@ def main() -> None:
           f"prefetch)")
 
     sweep_demo()
+    validate_demo()
 
 
 if __name__ == "__main__":
     if "--sweep-only" in sys.argv[1:]:
         sweep_demo()
+    elif "--validate" in sys.argv[1:]:
+        validate_demo()
     else:
         main()

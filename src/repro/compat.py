@@ -1,0 +1,149 @@
+"""Version-adaptive jax/Pallas compatibility layer.
+
+Every jax API this repo uses that has drifted across released versions is
+centralized here, so kernels, models, launch code, and test subprocess
+snippets all import the *same* resolution instead of scattering per-file
+``try/except ImportError`` shims:
+
+* ``tpu_compiler_params(**kw)`` — ``pltpu.CompilerParams`` (new name) vs
+  ``pltpu.TPUCompilerParams`` (jax 0.4.x), with unknown-field dropping so a
+  kwarg added in a newer jax does not break an older one.
+* ``prefetch_scalar_grid_spec(**kw)`` — ``pltpu.PrefetchScalarGridSpec``
+  under whichever module layout this jax ships.
+* ``make_mesh(shape, axes)`` — ``jax.sharding.AxisType`` landed in jax 0.5;
+  older versions build implicitly-Auto meshes without the kwarg.
+* ``optimization_barrier(x)`` — jax < 0.5 has no differentiation rule for
+  the ``optimization_barrier`` primitive; this wrapper substitutes a
+  ``custom_jvp`` identity-tangent barrier there so remat'd training still
+  differentiates (the barrier only pins scheduling, it is mathematically
+  the identity).
+* ``default_interpret(flag)`` — one place deciding when Pallas kernels run
+  in interpret mode (everywhere except a real TPU backend).
+
+The module imports jax but never touches device state at import time, so it
+is safe to import before ``XLA_FLAGS`` tricks (dry-run, subprocess tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+JAX_VERSION: tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+try:  # pure-python import; present on all backends
+    from jax.experimental.pallas import tpu as _pltpu
+except ImportError:  # pragma: no cover - ancient jax without pallas
+    _pltpu = None
+
+try:  # AxisType landed in jax 0.5; older jax means implicitly-Auto axes.
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU
+# ---------------------------------------------------------------------------
+
+def tpu_compiler_params_cls():
+    """The TPU compiler-params class under whichever name this jax ships."""
+    if _pltpu is None:  # pragma: no cover
+        return None
+    return (getattr(_pltpu, "CompilerParams", None)
+            or getattr(_pltpu, "TPUCompilerParams", None))
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU ``compiler_params`` for ``pl.pallas_call`` portably.
+
+    Unknown fields are dropped rather than raising, so a parameter that only
+    exists in newer jax degrades to the compiler default on older jax.
+    Returns ``None`` (pallas_call accepts it) when no params class exists.
+    """
+    cls = tpu_compiler_params_cls()
+    if cls is None:  # pragma: no cover
+        return None
+    try:
+        return cls(**kwargs)
+    except TypeError:
+        if dataclasses.is_dataclass(cls):
+            known = {f.name for f in dataclasses.fields(cls)}
+            return cls(**{k: v for k, v in kwargs.items() if k in known})
+        raise
+
+
+def prefetch_scalar_grid_spec(**kwargs):
+    """``pltpu.PrefetchScalarGridSpec`` across module layouts."""
+    if _pltpu is None or not hasattr(_pltpu, "PrefetchScalarGridSpec"):
+        raise NotImplementedError(
+            "this jax has no PrefetchScalarGridSpec; scalar-prefetch kernels "
+            "need jax >= 0.4.20")
+    return _pltpu.PrefetchScalarGridSpec(**kwargs)
+
+
+def default_interpret(interpret: bool | None = None, *,
+                      backend: str | None = None) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` flag.
+
+    Explicit True/False wins; ``None`` means "interpret everywhere except a
+    real TPU backend" — the single policy all ops.py wrappers share.
+    """
+    if interpret is not None:
+        return interpret
+    return (backend or jax.default_backend()) != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Meshes
+# ---------------------------------------------------------------------------
+
+def make_mesh(shape, axes, *, explicit: bool = False):
+    """``jax.make_mesh`` with AxisType when available, without it otherwise."""
+    if AxisType is not None:
+        kind = AxisType.Explicit if explicit else AxisType.Auto
+        return jax.make_mesh(shape, axes, axis_types=(kind,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+# ---------------------------------------------------------------------------
+# optimization_barrier
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def barrier_is_differentiable() -> bool:
+    """Whether this jax ships a differentiation rule for the barrier."""
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x) * 1.0)(0.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
+@jax.custom_vjp
+def _barrier_custom(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return _barrier_custom(x), None
+
+
+def _barrier_bwd(_, g):
+    # The barrier is the identity; barrier the cotangent too so the backward
+    # pass keeps the same scheduling pin as the forward (custom_vjp rather
+    # than custom_jvp: the tangent-side barrier would need the primitive's
+    # transpose rule, which old jax also lacks).
+    return (jax.lax.optimization_barrier(g),)
+
+
+_barrier_custom.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def optimization_barrier(x):
+    """Differentiable ``jax.lax.optimization_barrier`` on every jax version."""
+    if barrier_is_differentiable():
+        return jax.lax.optimization_barrier(x)
+    return _barrier_custom(x)

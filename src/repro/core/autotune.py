@@ -62,6 +62,32 @@ class TrialResult:
         }
 
 
+@dataclasses.dataclass(frozen=True)
+class TrialFailure:
+    """Structured record of one candidate that failed to compile/analyze."""
+
+    candidate: Candidate
+    error_type: str
+    error_msg: str
+
+    def summary(self) -> dict:
+        return {"name": self.candidate.name, "error_type": self.error_type,
+                "error_msg": self.error_msg}
+
+
+class AutotuneResults(list):
+    """Ranked ``TrialResult`` list carrying the per-candidate failures.
+
+    Behaves exactly like a plain list of results (so existing callers keep
+    working); ``.failures`` holds one :class:`TrialFailure` per candidate
+    that could not be analyzed.
+    """
+
+    def __init__(self, results=(), failures: list[TrialFailure] = ()):
+        super().__init__(results)
+        self.failures = list(failures)
+
+
 def default_candidates(kind: str) -> list[Candidate]:
     out = [Candidate("baseline", {}, {})]
     if kind in ("decode", "long_decode"):
@@ -99,11 +125,14 @@ def _code_fingerprint() -> str:
 
         h = hashlib.sha256()
         # repro is a namespace package (no __init__.py): use __path__.
+        # kernels/ is included recursively: models lazily route through the
+        # Pallas kernels, so a kernel edit changes the compiled step too.
         root = pathlib.Path(next(iter(repro.__path__)))
-        for sub in ("launch", "models", "configs"):
-            for p in sorted((root / sub).glob("*.py")):
-                h.update(p.name.encode())
+        for sub in ("launch", "models", "configs", "kernels"):
+            for p in sorted((root / sub).rglob("*.py")):
+                h.update(str(p.relative_to(root)).encode())
                 h.update(p.read_bytes())
+        h.update((root / "compat.py").read_bytes())
         _CODE_FPR = h.hexdigest()[:16]
     return _CODE_FPR
 
@@ -258,12 +287,19 @@ def run_trial(cfg, shape, mesh, candidate: Candidate,
 def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
              hw: TpuParams = TPU_V5E, *,
              cache: HloAnalysisCache | bool | None = True,
-             gather_row_bytes: float = 512.0) -> list[TrialResult]:
+             gather_row_bytes: float = 512.0) -> AutotuneResults:
     """Rank candidates by predicted step time (ascending).
 
     Per-candidate compiles go through the on-disk analysis cache (pass
     ``cache=False`` to disable, or an ``HloAnalysisCache`` to control the
     location); the scoring itself is one batched pass over all candidates.
+
+    A candidate whose compile/analysis raises is recorded as a
+    :class:`TrialFailure` on the returned list's ``.failures`` instead of
+    being silently dropped.  If *every* candidate fails with the same error,
+    the failure is environmental rather than candidate-specific and the last
+    exception is re-raised — returning an empty ranking there would hide a
+    broken toolchain as "no viable designs".
     """
     if cache is True:
         cache = HloAnalysisCache()
@@ -271,17 +307,29 @@ def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
         cache = None
     cands = list(candidates) if candidates is not None \
         else default_candidates(shape.kind)
-    kept, records = [], []
+    kept, records, failures = [], [], []
+    last_exc: Exception | None = None
     for c in cands:
         try:
             records.append(analyze_candidate(cfg, shape, mesh, c, cache))
             kept.append(c)
         except Exception as e:  # noqa: BLE001 — a failed candidate is data
+            failures.append(TrialFailure(c, type(e).__name__, str(e)))
+            last_exc = e
             print(f"[autotune] {c.name} failed: {type(e).__name__}: {e}")
     if not records:
-        return []
+        distinct = {(f.error_type, f.error_msg) for f in failures}
+        # One candidate failing proves nothing about the toolchain; only an
+        # identical error across several candidates is environmental.
+        if len(failures) > 1 and len(distinct) == 1:
+            raise RuntimeError(
+                f"autotune: all {len(failures)} candidates failed with the "
+                f"same error (not candidate-specific): "
+                f"{failures[0].error_type}: {failures[0].error_msg}"
+            ) from last_exc
+        return AutotuneResults([], failures)
     scores = rank_records(records, hw, gather_row_bytes=gather_row_bytes)
-    return [
+    return AutotuneResults([
         TrialResult(candidate=kept[i],
                     prediction=_prediction_from(records[i], scores, int(i),
                                                 gather_row_bytes),
@@ -289,4 +337,4 @@ def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
                     memory_bytes=records[i].get("memory_bytes"),
                     cached=bool(records[i].get("cached")))
         for i in scores["order"]
-    ]
+    ], failures)

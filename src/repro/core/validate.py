@@ -1,0 +1,335 @@
+"""Measured-vs-predicted kernel validation harness.
+
+The paper's headline result is an analytical model whose predictions stay
+within ~9% of *measured* execution time.  PR 1 built the prediction side
+(vectorized Eqs. 1-10, sweep engine); this module closes the loop with the
+measurement side, mirroring the paper's SIV methodology:
+
+1. **Characterize** — run one known-streaming kernel and derive the host's
+   effective memory bandwidth (the paper's microbenchmark step that anchors
+   Table II/III parameters to the real board).  ``calibrate_dram`` rescales
+   ``f_mem`` of a DDR4 parameter set so Eq. 2's ideal time matches the
+   measured stream bandwidth of whatever backend is running (CPU interpret
+   mode in CI, a real accelerator elsewhere).
+2. **Read the early report** — lower + compile each kernel and extract
+   bytes-moved per access class from the trip-count-aware HLO counter
+   (`hlo_counter.analyze`), the transplant of reading the HLS RTL report
+   instead of waiting for the bitstream.
+3. **Predict** — map the classed bytes onto LSU groups (stream -> burst-
+   coalesced aligned, strided -> non-aligned, gather -> write-ACK) and score
+   Eqs. 1-10 for all kernels in one ``model_batch.estimate_batch`` pass.
+4. **Measure** — time the kernel for real (interpret mode on CPU, compiled
+   on accelerators) and report per-kernel |measured - predicted| errors,
+   the shape of the paper's Table IV/V error tables
+   (`benchmarks.paper_tables.table6_kernel_validation`).
+
+On CPU the absolute errors are dominated by interpreter overhead, so the
+harness reports them honestly rather than asserting a bound — the contract
+(and the regression test) is that the loop *runs end to end* and produces
+finite errors, which is the prerequisite for calibrating against real TPU
+timings later.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.fpga import DDR4_1866, DramParams
+from repro.core.lsu import Lsu, LsuType
+from repro.core.model_batch import GroupBatch, estimate_batch
+
+#: Modeled bytes of one LSU access when mapping HLO traffic onto LSU groups.
+#: 64 B = the DDR4 minimum burst (dq * bl = 8 * 8) of the paper's Table III
+#: parts, and the cache-line granularity of the CPU backend.
+ACCESS_BYTES = 64
+
+
+# ---------------------------------------------------------------------------
+# cases
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ValidationCase:
+    """One kernel to validate: ``build()`` returns (jitted fn, args)."""
+
+    name: str
+    build: Callable[[], tuple]
+    calibration: bool = False    # stream anchor used to fit the bandwidth
+
+
+def default_cases(*, small: bool = True) -> list[ValidationCase]:
+    """The five Pallas kernels + the three membench access classes.
+
+    ``small=True`` keeps interpret-mode wall time in seconds (CI); pass
+    False on a real accelerator for measurement-grade shapes.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.decode_attention.ops import gqa_decode
+    from repro.kernels.flash_attention.ops import mha
+    from repro.kernels.membench import ops as MB
+    from repro.kernels.mlstm_chunk.ops import chunked_mlstm
+    from repro.kernels.rglru.ops import scan as rglru_scan
+
+    n = 1 << (15 if small else 22)
+    S = 128 if small else 2048
+
+    def aligned():
+        xs = tuple(jax.random.normal(jax.random.PRNGKey(i), (n,), jnp.float32)
+                   for i in range(3))
+        return jax.jit(functools.partial(MB.aligned_sum, block=2048)), (xs,)
+
+    def strided():
+        xs = tuple(jax.random.normal(jax.random.PRNGKey(i), (n,), jnp.float32)
+                   for i in range(2))
+        return (jax.jit(functools.partial(MB.strided_sum, delta=4, block=512)),
+                (xs,))
+
+    def gather():
+        xs = tuple(jax.random.normal(jax.random.PRNGKey(i), (n,), jnp.float32)
+                   for i in range(2))
+        idx = jax.random.randint(jax.random.PRNGKey(9), (16,), 0, n // 512)
+        return (jax.jit(functools.partial(MB.gather_sum, block=512)),
+                (xs, idx))
+
+    def flash():
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, S, 4, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, S, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, S, 2, 32), jnp.float32)
+        return (jax.jit(functools.partial(mha, block_q=64, block_kv=64)),
+                (q, k, v))
+
+    def decode():
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (2, 1, 8, 32), jnp.float32)
+        kc = jax.random.normal(ks[1], (2, S, 2, 32), jnp.float32)
+        vc = jax.random.normal(ks[2], (2, S, 2, 32), jnp.float32)
+        ln = jnp.asarray(S, jnp.int32)
+        return (jax.jit(functools.partial(gqa_decode, block_s=64)),
+                (q, kc, vc, ln))
+
+    def rglru():
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        a = jax.random.uniform(ks[0], (2, S, 256), jnp.float32, 0.6, 0.999)
+        b = jax.random.normal(ks[1], (2, S, 256), jnp.float32)
+        return (jax.jit(functools.partial(rglru_scan, block_s=64,
+                                          block_w=128)), (a, b))
+
+    def mlstm():
+        ks = jax.random.split(jax.random.PRNGKey(5), 5)
+        q = jax.random.normal(ks[0], (1, S, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, S, 2, 32), jnp.float32) / 32 ** 0.5
+        v = jax.random.normal(ks[2], (1, S, 2, 32), jnp.float32)
+        li = jax.nn.log_sigmoid(jax.random.normal(ks[3], (1, S, 2)))
+        lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (1, S, 2)) + 2.0)
+        return (jax.jit(functools.partial(chunked_mlstm, chunk=64)),
+                (q, k, v, li, lf))
+
+    return [
+        ValidationCase("membench_aligned", aligned, calibration=True),
+        ValidationCase("membench_strided", strided),
+        ValidationCase("membench_gather", gather),
+        ValidationCase("flash_attention", flash),
+        ValidationCase("decode_attention", decode),
+        ValidationCase("rglru_scan", rglru),
+        ValidationCase("mlstm_chunk", mlstm),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# measure / analyze / predict
+# ---------------------------------------------------------------------------
+
+def time_callable(fn, args, *, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds per call, device-synchronized."""
+    import jax
+
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def traffic_from_compiled(compiled) -> dict:
+    """Classed bytes/FLOPs of a compiled executable from its HLO text."""
+    from repro.core import hlo_counter as _hc
+
+    hc = _hc.analyze(compiled.as_text())
+    return {"flops": hc.flops, "total_bytes": hc.total_bytes,
+            "bytes_by_class": dict(hc.bytes_by_class)}
+
+
+def analyze_traffic(fn, args) -> dict:
+    """Lower + compile ``fn(*args)`` and read classed bytes/FLOPs from HLO."""
+    return traffic_from_compiled(fn.lower(*args).compile())
+
+
+_CLASS_LSU = {"stream": LsuType.BC_ALIGNED,
+              "strided": LsuType.BC_NON_ALIGNED,
+              "gather": LsuType.BC_WRITE_ACK,
+              "serialized": LsuType.BC_WRITE_ACK}
+
+
+def lsus_from_classes(bytes_by_class: dict, *,
+                      access_bytes: int = ACCESS_BYTES) -> list[Lsu]:
+    """Map the HLO counter's access-class byte totals onto LSU groups.
+
+    Each class becomes one LSU of the matching paper type issuing
+    ``access_bytes``-wide accesses; total traffic is preserved (the byte
+    count already reflects what the compiled program touches, so strides are
+    expressed through the LSU *type* overheads, not through delta-inflation,
+    which would double-count).
+    """
+    lsus = []
+    for name, b in sorted(bytes_by_class.items()):
+        if b <= 0:
+            continue
+        lsus.append(Lsu(_CLASS_LSU.get(name, LsuType.BC_ALIGNED),
+                        ls_width=access_bytes,
+                        ls_acc=max(1, int(round(b / access_bytes))),
+                        ls_bytes=access_bytes, name=name))
+    return lsus
+
+
+def calibrate_dram(measured_bw: float, base: DramParams = DDR4_1866,
+                   name: str = "host-calibrated") -> DramParams:
+    """DRAM parameter set whose Eq. 2 peak bandwidth equals ``measured_bw``.
+
+    ``bw_mem = dq * 2 * f_mem``, so only the I/O clock is rescaled; the
+    timing overheads (t_rcd/t_rp/t_wr) keep their datasheet values — the
+    same split the paper uses between datasheet rows and measured rows.
+    """
+    return dataclasses.replace(base, name=name,
+                               f_mem=measured_bw / (2.0 * base.dq))
+
+
+# ---------------------------------------------------------------------------
+# the harness
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelValidation:
+    """One row of the measured-vs-predicted error table."""
+
+    name: str
+    backend: str
+    interpret: bool
+    measured_s: float
+    predicted_s: float
+    bytes_moved: float
+    flops: float
+    err_pct: float               # |predicted - measured| / measured * 100
+    memory_bound: bool
+
+    def row(self) -> dict:
+        return {
+            "kernel": self.name, "backend": self.backend,
+            "interpret": self.interpret,
+            "measured_ms": round(self.measured_s * 1e3, 4),
+            "predicted_ms": round(self.predicted_s * 1e3, 4),
+            "bytes_mb": round(self.bytes_moved / 1e6, 3),
+            "flops_m": round(self.flops / 1e6, 3),
+            "memory_bound": bool(self.memory_bound),
+            "err_pct": round(self.err_pct, 1),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationReport:
+    results: list[KernelValidation]
+    failures: list[dict]         # {"kernel": name, "error": msg}
+    dram: DramParams             # the calibrated parameter set
+    measured_bw: float           # stream bandwidth anchor [B/s]
+    calibration_factor: float = 1.0   # measured/modeled on the stream anchor
+
+    @property
+    def max_err_pct(self) -> float:
+        return max((r.err_pct for r in self.results), default=float("nan"))
+
+    def rows(self) -> list[dict]:
+        return [r.row() for r in self.results]
+
+
+def validate(cases: Sequence[ValidationCase] | None = None, *,
+             iters: int = 3, warmup: int = 1,
+             dram: DramParams | None = None,
+             base: DramParams = DDR4_1866) -> ValidationReport:
+    """Run the measured-vs-predicted loop over ``cases``.
+
+    Pass ``dram`` to skip bandwidth calibration (reproducible tests);
+    otherwise the first ``calibration=True`` case (or the first case)
+    anchors the effective bandwidth.  On top of the bandwidth fit, a single
+    host factor — measured/modeled time on the same stream anchor — absorbs
+    backend-global costs the DRAM-scale model cannot see (interpret-mode
+    interpreter overhead, CPU caches hiding row misses), so per-kernel
+    errors measure the model's *relative* fidelity across kernels: the
+    paper's normalized-figure methodology.  A case that fails to
+    build/compile/run becomes a failure record, never an exception —
+    partial tables are still tables.
+    """
+    import jax
+
+    from repro import compat
+
+    backend = jax.default_backend()
+    interpret = compat.default_interpret()
+    cases = list(cases) if cases is not None else default_cases()
+
+    measured: list[tuple[ValidationCase, float, dict]] = []
+    failures: list[dict] = []
+    for case in cases:
+        try:
+            fn, args = case.build()
+            # Compile once: the AOT executable is both analyzed and timed.
+            compiled = fn.lower(*args).compile()
+            traffic = traffic_from_compiled(compiled)
+            t = time_callable(compiled, args, iters=iters, warmup=warmup)
+            if not (np.isfinite(t) and t > 0):
+                raise ValueError(f"non-finite measurement {t!r}")
+            measured.append((case, t, traffic))
+        except Exception as e:  # noqa: BLE001 — a failed kernel is a row
+            failures.append({"kernel": case.name,
+                             "error": f"{type(e).__name__}: {e}"})
+
+    if not measured:
+        return ValidationReport([], failures,
+                                dram or base, float("nan"))
+
+    anchor = next((m for m in measured if m[0].calibration), measured[0])
+    measured_bw = anchor[2]["total_bytes"] / anchor[1]
+    if dram is None:
+        dram = calibrate_dram(measured_bw, base)
+
+    kernels = [lsus_from_classes(tr["bytes_by_class"])
+               for _, _, tr in measured]
+    est = estimate_batch(GroupBatch.from_kernels(kernels, dram))
+    t_raw = np.asarray(est.t_exe, dtype=float)
+
+    anchor_idx = measured.index(anchor)
+    factor = (anchor[1] / t_raw[anchor_idx]
+              if np.isfinite(t_raw[anchor_idx]) and t_raw[anchor_idx] > 0
+              else 1.0)
+
+    results = []
+    for i, (case, t, tr) in enumerate(measured):
+        pred = float(t_raw[i] * factor)
+        results.append(KernelValidation(
+            name=case.name, backend=backend, interpret=interpret,
+            measured_s=t, predicted_s=pred,
+            bytes_moved=float(tr["total_bytes"]), flops=float(tr["flops"]),
+            err_pct=abs(pred - t) / t * 100.0,
+            memory_bound=bool(np.asarray(est.memory_bound)[i]),
+        ))
+    return ValidationReport(results, failures, dram, measured_bw,
+                            calibration_factor=float(factor))

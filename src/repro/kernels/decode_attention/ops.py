@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.decode_attention.kernel import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
@@ -14,8 +15,7 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 def gqa_decode(q, k_cache, v_cache, kv_len, *, softcap=0.0, block_s=512,
                interpret=None):
     """q: (B, 1, Hq, D); caches: (B, S, Hkv, D) -> (B, 1, Hq, D)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = compat.default_interpret(interpret)
     B, one, Hq, D = q.shape
     Hkv = k_cache.shape[2]
     G = Hq // Hkv

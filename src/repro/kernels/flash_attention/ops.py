@@ -11,11 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.flash_attention.kernel import flash_attention
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -23,8 +20,7 @@ def _on_tpu() -> bool:
 def mha(q, k, v, *, causal=True, window=None, softcap=0.0,
         block_q=512, block_kv=512, interpret=None):
     """q: (B,Sq,Hq,D), k/v: (B,Skv,Hkv,D) -> (B,Sq,Hq,D)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = compat.default_interpret(interpret)
     B, Sq, Hq, D = q.shape
     Skv = k.shape[1]
     # kernel layout: (B, H, S, D)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _sum_kernel(*refs):
     o_ref = refs[-1]
@@ -79,7 +81,7 @@ def gather_sum(xs: list[jax.Array], idx: jax.Array, *, block: int = 2048,
     """z[i-th block] = sum of x_g[idx[i]-th block] — data-dependent block
     indirection via scalar prefetch."""
     n_blocks = idx.shape[0]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=(n_blocks,),
         in_specs=[pl.BlockSpec((block,), lambda i, idx_ref: (idx_ref[i],))

@@ -5,11 +5,12 @@ import functools
 
 import jax
 
+from repro import compat
 from repro.kernels.membench import kernel as K
 
 
 def _interp(v):
-    return jax.default_backend() != "tpu" if v is None else v
+    return compat.default_interpret(v)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
                   C_ref, n_ref, *, chunk: int):
@@ -97,7 +99,7 @@ def mlstm_chunk(
             pltpu.VMEM((dh, dh), jnp.float32),
             pltpu.VMEM((dh,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, li, lf)

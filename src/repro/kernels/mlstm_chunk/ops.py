@@ -5,14 +5,14 @@ import functools
 
 import jax
 
+from repro import compat
 from repro.kernels.mlstm_chunk.kernel import mlstm_chunk
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def chunked_mlstm(q, k, v, li, lf, *, chunk=256, interpret=None):
     """q,k,v: (B,S,H,dh); li/lf: (B,S,H) -> (B,S,H,dh)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = compat.default_interpret(interpret)
     B, S, H, dh = q.shape
     c = min(chunk, S)
     while S % c:

@@ -5,13 +5,13 @@ import functools
 
 import jax
 
+from repro import compat
 from repro.kernels.rglru.kernel import rglru_scan
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
 def scan(a, b, *, block_s=256, block_w=512, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = compat.default_interpret(interpret)
     B, S, W = a.shape
     bs = min(block_s, S)
     while S % bs:

@@ -10,17 +10,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
-try:  # AxisType landed in jax 0.5; older jax means implicitly-Auto axes.
-    from jax.sharding import AxisType
-except ImportError:  # pragma: no cover - depends on installed jax
-    AxisType = None
-
-
-def _make_mesh(shape, axes) -> Mesh:
-    if AxisType is not None:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+from repro.compat import AxisType, make_mesh as _make_mesh  # noqa: F401
+# AxisType is re-exported for callers that used the old shim location.
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -1,0 +1,181 @@
+"""Unit tests for the version-adaptive compat layer.
+
+The old/new jax namespaces are simulated by monkeypatching, so both branches
+of every shim are exercised regardless of which jax is installed.
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+
+
+@dataclasses.dataclass
+class _FakeParams:
+    dimension_semantics: tuple = ()
+
+
+class TestCompilerParams:
+    def test_real_jax_builds_params(self):
+        p = compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"))
+        assert p is not None
+        assert tuple(p.dimension_semantics) == ("parallel", "arbitrary")
+
+    def test_new_namespace(self, monkeypatch):
+        fake = types.SimpleNamespace(CompilerParams=_FakeParams)
+        monkeypatch.setattr(compat, "_pltpu", fake)
+        p = compat.tpu_compiler_params(dimension_semantics=("parallel",))
+        assert isinstance(p, _FakeParams)
+
+    def test_old_namespace(self, monkeypatch):
+        fake = types.SimpleNamespace(TPUCompilerParams=_FakeParams)
+        monkeypatch.setattr(compat, "_pltpu", fake)
+        p = compat.tpu_compiler_params(dimension_semantics=("parallel",))
+        assert isinstance(p, _FakeParams)
+
+    def test_unknown_fields_dropped(self, monkeypatch):
+        fake = types.SimpleNamespace(CompilerParams=_FakeParams)
+        monkeypatch.setattr(compat, "_pltpu", fake)
+        p = compat.tpu_compiler_params(dimension_semantics=("parallel",),
+                                       field_from_the_future=123)
+        assert isinstance(p, _FakeParams)
+        assert not hasattr(p, "field_from_the_future")
+
+
+class TestPrefetchGridSpec:
+    def test_missing_raises_not_implemented(self, monkeypatch):
+        monkeypatch.setattr(compat, "_pltpu", types.SimpleNamespace())
+        with pytest.raises(NotImplementedError):
+            compat.prefetch_scalar_grid_spec(num_scalar_prefetch=1, grid=(1,))
+
+
+class TestMakeMesh:
+    def test_builds_mesh_on_installed_jax(self):
+        mesh = compat.make_mesh((len(jax.devices()),), ("d",))
+        assert tuple(mesh.axis_names) == ("d",)
+
+    def test_old_jax_branch_omits_axis_types(self, monkeypatch):
+        calls = {}
+
+        def fake_make_mesh(shape, axes, **kw):
+            calls.update(kw)
+            return "mesh"
+
+        monkeypatch.setattr(compat, "AxisType", None)
+        monkeypatch.setattr(compat.jax, "make_mesh", fake_make_mesh)
+        assert compat.make_mesh((2,), ("d",)) == "mesh"
+        assert "axis_types" not in calls
+
+    def test_new_jax_branch_passes_axis_types(self, monkeypatch):
+        calls = {}
+
+        class FakeAxisType:
+            Auto = "auto"
+            Explicit = "explicit"
+
+        def fake_make_mesh(shape, axes, axis_types=None):
+            calls["axis_types"] = axis_types
+            return "mesh"
+
+        monkeypatch.setattr(compat, "AxisType", FakeAxisType)
+        monkeypatch.setattr(compat.jax, "make_mesh", fake_make_mesh)
+        assert compat.make_mesh((2, 2), ("a", "b")) == "mesh"
+        assert calls["axis_types"] == ("auto", "auto")
+        compat.make_mesh((2,), ("a",), explicit=True)
+        assert calls["axis_types"] == ("explicit",)
+
+
+class TestDefaultInterpret:
+    def test_explicit_flag_wins(self):
+        assert compat.default_interpret(True, backend="tpu") is True
+        assert compat.default_interpret(False, backend="cpu") is False
+
+    def test_backend_policy(self):
+        assert compat.default_interpret(backend="tpu") is False
+        assert compat.default_interpret(backend="cpu") is True
+        assert compat.default_interpret(backend="gpu") is True
+
+
+class TestOptimizationBarrier:
+    def test_identity_forward(self):
+        x = jnp.arange(6.0).reshape(2, 3)
+        np.testing.assert_array_equal(
+            np.asarray(compat.optimization_barrier(x)), np.asarray(x))
+
+    def test_differentiates_on_this_jax(self):
+        g = jax.grad(lambda x: (compat.optimization_barrier(x) ** 2).sum())(
+            jnp.ones(4))
+        np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones(4))
+
+    def test_custom_jvp_fallback_path(self, monkeypatch):
+        """Force the no-native-rule branch and check grad still works."""
+        monkeypatch.setattr(compat, "barrier_is_differentiable", lambda: False)
+        g = jax.grad(lambda x: (compat.optimization_barrier(x) * 3.0).sum())(
+            jnp.ones(3))
+        np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones(3))
+
+    def test_under_checkpoint_and_scan(self, monkeypatch):
+        monkeypatch.setattr(compat, "barrier_is_differentiable", lambda: False)
+
+        def f(x):
+            def body(c, _):
+                return compat.optimization_barrier(c) * 1.5, None
+            body = jax.checkpoint(body, prevent_cse=False)
+            y, _ = jax.lax.scan(body, x, None, length=3)
+            return y.sum()
+
+        g = jax.grad(f)(jnp.ones(2))
+        np.testing.assert_allclose(np.asarray(g), 1.5 ** 3 * np.ones(2),
+                                   rtol=1e-6)
+
+
+class TestAutotuneFailureHandling:
+    def _patch(self, monkeypatch, errors):
+        """Make analyze_candidate raise per-candidate errors (or succeed)."""
+        from repro.core import autotune as AT
+
+        def fake_analyze(cfg, shape, mesh, candidate, cache=None):
+            err = errors.get(candidate.name)
+            if err is not None:
+                raise err
+            return {"flops": 1.0, "bytes_by_class": {"stream": 1e6},
+                    "collective_wire_bytes": 0.0,
+                    "collective_operand_bytes": 0.0,
+                    "collective_by_kind": {}, "n_collectives": 0.0,
+                    "memory_bytes": None, "xla_cost": {},
+                    "compile_s": 0.0, "cached": False}
+
+        monkeypatch.setattr(AT, "analyze_candidate", fake_analyze)
+        return AT
+
+    def test_all_same_error_reraises(self, monkeypatch):
+        AT = self._patch(monkeypatch, {
+            "a": NotImplementedError("no rule for optimization_barrier"),
+            "b": NotImplementedError("no rule for optimization_barrier")})
+        cands = [AT.Candidate("a", {}, {}), AT.Candidate("b", {}, {})]
+        with pytest.raises(RuntimeError, match="not candidate-specific"):
+            AT.autotune(None, None, None, cands, cache=False)
+
+    def test_partial_failure_recorded(self, monkeypatch):
+        AT = self._patch(monkeypatch,
+                         {"bad": ValueError("candidate-specific boom")})
+        cands = [AT.Candidate("ok", {}, {}), AT.Candidate("bad", {}, {})]
+        res = AT.autotune(None, None, None, cands, cache=False)
+        assert len(res) == 1 and res[0].candidate.name == "ok"
+        assert len(res.failures) == 1
+        assert res.failures[0].summary()["name"] == "bad"
+        assert res.failures[0].error_type == "ValueError"
+
+    def test_distinct_errors_return_empty_with_failures(self, monkeypatch):
+        AT = self._patch(monkeypatch, {"a": ValueError("x"),
+                                       "b": TypeError("y")})
+        cands = [AT.Candidate("a", {}, {}), AT.Candidate("b", {}, {})]
+        res = AT.autotune(None, None, None, cands, cache=False)
+        assert list(res) == []
+        assert {f.error_type for f in res.failures} == {"ValueError",
+                                                        "TypeError"}

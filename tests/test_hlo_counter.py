@@ -87,8 +87,8 @@ class TestClassification:
 
 class TestCollectives:
     def _mesh(self):
-        return jax.make_mesh((len(jax.devices()),), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        return make_mesh((len(jax.devices()),), ("d",))
 
     def test_psum_collective_counted(self):
         from jax.sharding import NamedSharding, PartitionSpec as P

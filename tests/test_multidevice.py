@@ -30,12 +30,11 @@ PREAMBLE = textwrap.dedent("""
     import dataclasses, json
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.configs import ARCHS, reduced_config
     from repro.configs.shapes import ShapeSpec
     from repro.launch.steps import build_step, TrainConfig
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
 """)
 
 
@@ -113,8 +112,7 @@ def test_elastic_restore_across_meshes():
         mgr = CheckpointManager(d)
         mgr.save(1, {"w": tree_s, "b": tree["b"]})
         # new mesh with swapped factors
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
+        mesh2 = make_mesh((2, 4), ("data", "model"))
         sh2 = {"w": NamedSharding(mesh2, P("model", "data")),
                "b": NamedSharding(mesh2, P(None))}
         restored, step = mgr.restore({"w": tree["w"], "b": tree["b"]},
