@@ -3,16 +3,24 @@
 Every function returns a list of CSV-ready row dicts and is independently
 runnable; ``benchmarks.run`` drives them all and prints the
 ``name,us_per_call,derived`` summary rows the harness contract requires.
+
+All scoring routes through the unified ``Design``/``Session`` API; the
+paper tables use the scalar backend (the readable per-LSU reference path,
+whose breakdown fields the tables print).
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import DDR4_1866, DDR4_2666, LsuType, estimate
-from repro.core.apps import APPS, microbench, table4_rows
+from repro import Design, Session
+from repro.core import DDR4_1866, DDR4_2666, LsuType
+from repro.core.apps import APPS, table4_rows
 from repro.core.baselines import hlscope_estimate, wang_estimate
 from repro.core.dramsim import simulate
 from repro.core.model import pipeline_time
+
+#: Paper Table III hardware, scalar reference backend.
+_SESSION = Session(dram=DDR4_1866, backend="scalar")
 
 
 def fig3_membound() -> list[dict]:
@@ -21,9 +29,9 @@ def fig3_membound() -> list[dict]:
     rows = []
     for n_lsu in (1, 2, 4):
         for simd in (1, 4, 16):
-            lsus = microbench(LsuType.BC_ALIGNED, n_ga=n_lsu, simd=simd,
-                              n_elems=1 << 20, include_write=False)
-            est = estimate(lsus, DDR4_1866)
+            est = _SESSION.estimate(Design.microbench(
+                LsuType.BC_ALIGNED, n_ga=n_lsu, simd=simd,
+                n_elems=1 << 20, include_write=False).with_f(1))
             for f_kernel in (150e6, 300e6, 450e6):
                 t_pipe = pipeline_time((1 << 20) // simd, f=1,
                                        f_kernel=f_kernel)
@@ -50,9 +58,10 @@ def fig4_lsu_microbench() -> list[dict]:
         for simd in (1, 4, 16):
             for n_ga in (1, 2, 4):
                 n = 1 << (14 if lsu_type is LsuType.ATOMIC_PIPELINED else 18)
-                lsus = microbench(lsu_type, n_ga=n_ga, simd=simd, n_elems=n)
-                est = estimate(lsus, DDR4_1866)
-                sim = simulate(lsus, DDR4_1866)
+                design = Design.microbench(lsu_type, n_ga=n_ga, simd=simd,
+                                           n_elems=n).with_f(1)
+                est = _SESSION.estimate(design)
+                sim = simulate(list(design.lsus), DDR4_1866)
                 err = (abs(est.t_exe - sim.t_total) / sim.t_total * 100
                        if sim.t_total else 0.0)
                 rows.append({
@@ -78,9 +87,9 @@ def fig5_stride() -> list[dict]:
             if lsu_type is LsuType.BC_ALIGNED and delta == 5:
                 # paper: delta=5 cannot be compiled aligned (page alignment)
                 continue
-            lsus = microbench(lsu_type, n_ga=3, simd=16, n_elems=1 << 18,
-                              delta=delta)
-            t = estimate(lsus, DDR4_1866).t_exe
+            t = _SESSION.estimate(Design.microbench(
+                lsu_type, n_ga=3, simd=16, n_elems=1 << 18,
+                delta=delta).with_f(1)).t_exe
             if base is None:
                 base = t
             rows.append({"lsu": tag, "delta": delta,
@@ -108,17 +117,22 @@ def table5_comparison() -> list[dict]:
         ("DDR4-2666", "vectoradd"): (67.9, 63.3, 1.0),
     }
     cases = {
-        "bca_1": microbench(LsuType.BC_ALIGNED, n_ga=1, n_elems=1 << 18,
-                            include_write=False),
-        "bca_4": microbench(LsuType.BC_ALIGNED, n_ga=4, n_elems=1 << 18),
-        "ack_2": microbench(LsuType.BC_WRITE_ACK, n_ga=1, n_elems=1 << 14),
-        "vectoradd": APPS["vectoradd"].lsus(1 << 20),
+        "bca_1": Design.microbench(LsuType.BC_ALIGNED, n_ga=1,
+                                   n_elems=1 << 18, include_write=False),
+        "bca_4": Design.microbench(LsuType.BC_ALIGNED, n_ga=4,
+                                   n_elems=1 << 18),
+        "ack_2": Design.microbench(LsuType.BC_WRITE_ACK, n_ga=1,
+                                   n_elems=1 << 14),
+        "vectoradd": Design(lsus=tuple(APPS["vectoradd"].lsus(1 << 20)),
+                            name="vectoradd"),
     }
     rows = []
     for dram in (DDR4_1866, DDR4_2666):
-        for tag, lsus in cases.items():
+        for tag, design in cases.items():
+            design = design.with_dram(dram).with_f(1)
+            lsus = list(design.lsus)
             t_meas = simulate(lsus, dram).t_total
-            t_ours = estimate(lsus, dram).t_exe
+            t_ours = _SESSION.estimate(design).t_exe
             t_wang = wang_estimate(lsus, dram)
             t_hls = hlscope_estimate(lsus, dram)
             perr = paper_errors.get((dram.name, tag), (None, None, None))
@@ -143,8 +157,6 @@ def table6_kernel_validation() -> list[dict]:
     lazily so the numpy-only tables stay jax-free, and a jax-less install
     gets a placeholder row instead of a crashed benchmark run.
     """
-    from repro.core.validate import validate
-
     try:
         import jax  # noqa: F401
     except ImportError:
@@ -153,7 +165,7 @@ def table6_kernel_validation() -> list[dict]:
                  "flops_m": "-", "memory_bound": "-",
                  "err_pct": "error: jax not installed"}]
 
-    rep = validate()
+    rep = _SESSION.validate()
     rows = rep.rows()
     for f in rep.failures:
         rows.append({"kernel": f["kernel"], "backend": "-", "interpret": "-",

@@ -21,10 +21,9 @@ import pathlib
 import sys
 import time
 
-try:
-    import repro  # noqa: F401 — installed (pip install -e .) or on PYTHONPATH
-except ImportError:  # running from a raw checkout
-    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+# `pip install -e .` or the root conftest.py make `repro` importable; the
+# per-entry-file src/ bootstrap this file used to carry is gone.  Run from
+# an installed checkout or with PYTHONPATH=src.
 
 
 def _csv(rows: list[dict]) -> str:

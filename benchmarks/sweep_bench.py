@@ -1,30 +1,23 @@
 """Design-space sweep benchmark: batched vs scalar scoring of Eqs. 1-10.
 
 The paper's value proposition is exploration speed; this benchmark measures
-it.  It scores the same >= 10k-point design space twice — once by looping
-the scalar ``estimate(microbench(...))`` path, once through
-``sweep.sweep_grid`` — verifies element-wise agreement, and reports the
+it.  It scores the same >= 10k-point design space twice — once per point
+through ``Session(backend="scalar")``, once through the batched
+``Session.sweep`` — verifies element-wise agreement, and reports the
 speedup plus the Pareto front of the space.
 
 Run:  python -m benchmarks.sweep_bench  (or via benchmarks/run.py [--smoke])
 """
 from __future__ import annotations
 
-import pathlib
-import sys
 import time
 
 import numpy as np
 
-try:
-    import repro  # noqa: F401 — installed (pip install -e .) or on PYTHONPATH
-except ImportError:  # running from a raw checkout
-    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
-
-from repro.core import DDR4_1866, DDR4_2666, LsuType, estimate
-from repro.core.apps import microbench
+from repro import Design, Session, Space
+from repro.core import DDR4_1866, DDR4_2666, LsuType
 from repro.core.fpga import BspParams, STRATIX10_BSP
-from repro.core.sweep import SweepResult, sweep_grid
+from repro.core.sweep import SweepResult
 
 #: >= 10k-point space over every GMI LSU type, LSU count, SIMD width, input
 #: size, stride, write inclusion, DRAM part and BSP variant.
@@ -55,30 +48,29 @@ def scalar_loop(res: SweepResult) -> np.ndarray:
     """Score every point of ``res``'s design space with the scalar path."""
     P = res.points
     out = np.empty(res.n_points)
-    stride_types = (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
-                    LsuType.BC_CACHE)
+    sess = Session(backend="scalar")
     for i in range(res.n_points):
-        t = P["lsu_type"][i]
-        lsus = microbench(
-            t,
+        design = Design.microbench(
+            P["lsu_type"][i],
             n_ga=int(P["n_ga"][i]),
             simd=int(P["simd"][i]),
             n_elems=int(P["n_elems"][i]),
-            delta=int(P["delta"][i]) if t in stride_types else 1,
+            delta=int(P["delta"][i]),
             elem_bytes=int(P["elem_bytes"][i]),
             include_write=bool(P["include_write"][i]),
             val_constant=bool(P["val_constant"][i]),
+            dram=P["dram"][i], bsp=P["bsp"][i],
         )
-        out[i] = estimate(lsus, P["dram"][i], P["bsp"][i],
-                          f=int(P["simd"][i])).t_exe
+        out[i] = sess.estimate(design).t_exe
     return out
 
 
 def sweep_speedup(axes: dict | None = None) -> list[dict]:
     """One-row summary: points, batched/scalar wall time, speedup, fidelity."""
-    axes = dict(axes or FULL_AXES)
+    space = Space.grid(**dict(axes or FULL_AXES))
+    sess = Session()
     t0 = time.perf_counter()
-    res = sweep_grid(**axes)
+    res = sess.sweep(space)
     t_batch = time.perf_counter() - t0
 
     t0 = time.perf_counter()

@@ -2,7 +2,9 @@
 
 ``pip install -e .`` (what CI does) makes ``repro`` importable on its own;
 this fallback lets ``python -m pytest`` work from a raw checkout too,
-without a manual ``PYTHONPATH=src``.
+without a manual ``PYTHONPATH=src``.  This is the *only* bootstrap in the
+repo: benchmark/example entry points assume an installed package or
+``PYTHONPATH=src`` instead of carrying per-file copies of this block.
 """
 import pathlib
 import sys

@@ -9,9 +9,9 @@ Run:  PYTHONPATH=src python examples/autotune_sharding.py [--kind decode]
 """
 import argparse
 
-from repro.configs import ARCHS, get_config, reduced_config
+from repro import Session
+from repro.configs import get_config, reduced_config
 from repro.configs.shapes import ShapeSpec
-from repro.core.autotune import autotune, default_candidates
 from repro.launch.mesh import make_host_mesh
 
 
@@ -27,7 +27,7 @@ def main() -> None:
              else ShapeSpec("t", 128, 8, "train"))
     print(f"[autotune] {args.arch} (reduced) {args.kind} on "
           f"{mesh.devices.shape} mesh — compiling candidates...")
-    results = autotune(cfg, shape, mesh)
+    results = Session().autotune(cfg, shape, mesh)
     print(f"{'candidate':18s} {'t_step':>10s} {'bottleneck':>12s} "
           f"{'mem':>8s} {'compile':>8s}")
     for r in results:

@@ -13,29 +13,26 @@ Finally closes the loop: ``--validate`` (also run by default) measures the
 Pallas kernels and scores the analytical model against the measurement
 (`repro.core.validate`), printing the paper-style error table.
 
-Run:  python examples/membound_explorer.py   (src/ is bootstrapped if not
-installed; pass --sweep-only to skip the jax compilation part, --validate
-for just the measured-vs-predicted table)
+Run:  python examples/membound_explorer.py   (pip install -e . or
+PYTHONPATH=src; pass --sweep-only to skip the jax compilation part,
+--validate for just the measured-vs-predicted table)
+
+Everything routes through the unified ``repro.Design``/``repro.Session``
+API — this file doubles as its end-to-end example.
 """
-import pathlib
 import sys
 import time
 
-try:
-    import repro  # noqa: F401
-except ImportError:
-    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+from repro import Session, Space
 
 
 def sweep_demo() -> None:
     """Score a full design space in one pass and show the interesting slices."""
-    import numpy as np
-
     from repro.core import DDR4_1866, DDR4_2666, LsuType
-    from repro.core.sweep import sweep_grid
 
+    sess = Session()
     t0 = time.perf_counter()
-    res = sweep_grid(
+    res = sess.sweep(Space.grid(
         lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
                   LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED],
         n_ga=[1, 2, 3, 4],
@@ -43,7 +40,7 @@ def sweep_demo() -> None:
         n_elems=[1 << 16],
         delta=[1, 2, 4, 7],
         dram=[DDR4_1866, DDR4_2666],
-    )
+    ))
     dt = time.perf_counter() - t0
     print(f"\nDesign-space sweep: {res.n_points} points scored in "
           f"{dt * 1e3:.1f} ms ({res.n_points / dt:,.0f} points/s)")
@@ -72,9 +69,7 @@ def sweep_demo() -> None:
 def validate_demo() -> None:
     """Close the loop: measure the Pallas kernels and score the analytical
     model against the measurements (paper-style error table)."""
-    from repro.core.validate import validate
-
-    rep = validate()
+    rep = Session().validate()
     print(f"\nMeasured-vs-predicted validation "
           f"(backend={rep.results[0].backend if rep.results else '?'}, "
           f"stream anchor {rep.measured_bw / 1e9:.1f} GB/s, "
@@ -93,10 +88,10 @@ def explain(name: str, fn, *specs) -> None:
     import jax
 
     from repro.core import hlo as HLO
-    from repro.core.predictor import predict
 
     compiled = jax.jit(fn).lower(*specs).compile()
-    pred = predict(compiled.as_text(), HLO.cost_analysis_stats(compiled))
+    pred = Session().predict(compiled.as_text(),
+                             HLO.cost_analysis_stats(compiled))
     classes = {c.name: c.nbytes for c in pred.memory_components}
     print(f"{name:28s} AI={pred.arithmetic_intensity:8.2f} FLOP/B  "
           f"bound={pred.bottleneck:9s} classes="

@@ -9,9 +9,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import DDR4_1866, LsuType, estimate
-from repro.core.apps import microbench
+from repro import Design, Session
+from repro.core import DDR4_1866, LsuType
 from repro.core.dramsim import simulate
+
+SESSION = Session(dram=DDR4_1866)
 
 
 def faithful_demo() -> None:
@@ -19,10 +21,10 @@ def faithful_demo() -> None:
     print("1. Faithful FPGA model (paper Eqs. 1-10)")
     print("=" * 64)
     for n_ga in (1, 2, 4):
-        lsus = microbench(LsuType.BC_ALIGNED, n_ga=n_ga, simd=16,
-                          n_elems=1 << 20)
-        est = estimate(lsus, DDR4_1866)
-        sim = simulate(lsus, DDR4_1866)
+        design = Design.microbench(LsuType.BC_ALIGNED, n_ga=n_ga, simd=16,
+                                   n_elems=1 << 20)
+        est = SESSION.estimate(design)
+        sim = simulate(list(design.lsus), DDR4_1866)
         print(f"  sum-reduction #ga={n_ga}: "
               f"T_est={est.t_exe*1e3:6.3f} ms  T_sim={sim.t_total*1e3:6.3f} ms  "
               f"bw={est.effective_bandwidth/1e9:5.2f} GB/s  "
@@ -38,7 +40,6 @@ def tpu_demo() -> None:
     from repro.configs import ARCHS, reduced_config
     from repro.configs.shapes import ShapeSpec
     from repro.core import hlo as HLO
-    from repro.core.predictor import predict
     from repro.launch.mesh import make_host_mesh
     from repro.launch.steps import TrainConfig, build_step
 
@@ -47,7 +48,8 @@ def tpu_demo() -> None:
     built = build_step(cfg, ShapeSpec("demo", 128, 4, "train"), mesh,
                        TrainConfig())
     compiled = built.fn.lower(*built.args).compile()   # seconds, no TPU
-    pred = predict(compiled.as_text(), HLO.cost_analysis_stats(compiled))
+    pred = SESSION.predict(compiled.as_text(),
+                           HLO.cost_analysis_stats(compiled))
     print(f"  arch: {cfg.name} (reduced), mesh: {mesh.devices.shape}")
     print(f"  FLOPs/step:      {pred.flops:.3g}")
     print(f"  HBM bytes/step:  {pred.hbm_bytes:.3g}")

@@ -1,0 +1,61 @@
+"""repro — analytical model of memory-bound HLS applications, and its
+TPU/XLA transplant, behind one unified public API.
+
+Describe a design once (:class:`Design`), evaluate it in a hardware +
+calibration context (:class:`Session`), and every pipeline stage — estimate,
+sweep, autotune, validate, roofline, predict — speaks the same
+:class:`Estimate`/:class:`Report` result family:
+
+    >>> import repro
+    >>> sess = repro.Session()                        # DDR4-1866, numpy-batch
+    >>> d = repro.Design.microbench(repro.LsuType.BC_ALIGNED, n_ga=4)
+    >>> sess.estimate(d).t_exe
+    >>> sess.sweep(repro.Space.grid(n_ga=[1, 2, 4], simd=[1, 16])).top_k(3)
+
+Everything else (``repro.core.*``, ``repro.kernels.*``, ``repro.launch.*``)
+is implementation; the pre-PR-3 entry points (``model.estimate``,
+``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
+``autotune.autotune``, ``validate.validate``) remain importable for one
+release as :class:`DeprecationWarning` shims over this API.
+
+This module imports NumPy only; jax loads lazily, on first use of the
+``jax-jit`` backend, ``Design.from_kernel`` or ``Session.validate``.
+"""
+from repro.api import (
+    BACKENDS,
+    AutotuneReport,
+    Design,
+    Estimate,
+    Report,
+    RooflineReport,
+    Session,
+    Space,
+    SweepReport,
+    ValidateReport,
+)
+from repro.core.fpga import (
+    DDR4_1866,
+    DDR4_2666,
+    DRAM_CONFIGS,
+    BspParams,
+    DramParams,
+    STRATIX10_BSP,
+)
+from repro.core.hbm import AccessClass, TPU_V5E, TpuParams
+from repro.core.lsu import Lsu, LsuType, make_global_access
+
+__version__ = "0.3.0"
+
+__all__ = [
+    # the unified API
+    "Design", "Session", "Space", "Estimate", "Report",
+    "SweepReport", "AutotuneReport", "ValidateReport", "RooflineReport",
+    "BACKENDS",
+    # design vocabulary (paper Tables I-III)
+    "Lsu", "LsuType", "make_global_access",
+    "DramParams", "BspParams", "DDR4_1866", "DDR4_2666", "DRAM_CONFIGS",
+    "STRATIX10_BSP",
+    # TPU transplant hardware
+    "TpuParams", "TPU_V5E", "AccessClass",
+    "__version__",
+]

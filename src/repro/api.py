@@ -1,0 +1,753 @@
+"""Unified ``Design``/``Session`` API: one design description, one pipeline.
+
+The paper's value is a single analytical flow — describe a memory
+architecture once, get a fast prediction — but the repo historically grew
+five disjoint entry points (``model.estimate``, ``model_batch.estimate_batch``,
+``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
+``validate.validate``) that each re-invented how a design point, hardware
+parameters and calibration were specified.  This module consolidates them:
+
+* :class:`Design` — a frozen, self-contained description of one design
+  point: the LSU groups (paper Table II), optional per-design DRAM/BSP
+  overrides, the vectorization factor, and optional compute-side metadata
+  when the design was read off a compiled artifact.  Builder-style
+  ``with_*`` helpers derive variants; ``from_hlo``/``from_kernel`` read a
+  design straight out of a compiled XLA executable (the transplant of
+  reading the HLS early report), ``microbench``/``from_app`` build the
+  paper's SIV/Table IV designs.
+* :class:`Space` — a declarative design *space*: the Cartesian grid or a
+  random sample over the microbenchmark axes of :mod:`repro.core.sweep`.
+* :class:`Session` — the evaluation context: hardware parameters (DRAM +
+  BSP for the faithful FPGA model, :class:`~repro.core.hbm.TpuParams` for
+  the TPU transplant), a calibration factor, and a compute backend
+  (``scalar`` | ``numpy-batch`` | ``jax-jit``).  Every pipeline stage is a
+  method: ``estimate``, ``sweep``, ``autotune``, ``validate``,
+  ``roofline``, ``predict``.
+* :class:`Estimate` and the :class:`Report` family — one shared result
+  vocabulary across all of those stages (``rows()`` / ``to_csv()`` /
+  ``summary()``), instead of today's per-module dataclasses.
+
+All three backends run the *same* equations (the array core in
+:mod:`repro.core.model_batch`) and agree element-wise to 1e-6; the jax-jit
+backend evaluates under ``jax.jit`` with x64 enabled so results are
+bit-comparable with NumPy (tests/test_api.py).
+
+    >>> from repro import Design, Session, Space
+    >>> sess = Session()                       # DDR4-1866, numpy-batch
+    >>> est = sess.estimate(Design.microbench(LsuType.BC_ALIGNED, n_ga=4))
+    >>> res = sess.sweep(Space.grid(n_ga=[1, 2, 4], simd=[1, 4, 16]))
+    >>> res.top_k(3)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core import apps as _apps
+from repro.core import model as _model
+from repro.core import model_batch as _mb
+from repro.core import sweep as _sweep
+from repro.core.fpga import BspParams, DramParams, DDR4_1866, STRATIX10_BSP
+from repro.core.hbm import TpuParams, TPU_V5E
+from repro.core.lsu import Lsu, LsuType, make_global_access
+
+#: Supported Session compute backends, in increasing batch-friendliness.
+BACKENDS = ("scalar", "numpy-batch", "jax-jit")
+
+#: LSU types whose stride axis is live (mirrors apps.microbench semantics).
+_STRIDE_TYPES = (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED, LsuType.BC_CACHE)
+
+
+# ---------------------------------------------------------------------------
+# Design: one design point, described once
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Design:
+    """A frozen description of one design point.
+
+    ``lsus`` are the paper-Table-II load/store units the design instantiates
+    (use the constructors below rather than writing them by hand).  ``dram``
+    and ``bsp`` are optional per-design overrides of the session hardware;
+    ``f`` is the vectorization factor entering Eq. 10.  ``flops`` is
+    non-zero only for designs read off a compiled artifact
+    (``from_hlo``/``from_kernel``) and feeds the compute term of
+    ``Session.roofline``.
+    """
+
+    lsus: tuple[Lsu, ...]
+    dram: DramParams | None = None
+    bsp: BspParams | None = None
+    f: int = 1
+    name: str = ""
+    flops: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "lsus", tuple(self.lsus))
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def microbench(cls, lsu_type: LsuType, *, n_ga: int, simd: int = 16,
+                   n_elems: int = 1 << 22, delta: int = 1,
+                   elem_bytes: int = 4, include_write: bool = True,
+                   val_constant: bool = False, name: str = "",
+                   dram: DramParams | None = None,
+                   bsp: BspParams | None = None) -> "Design":
+        """The paper's SIV sum-reduction microbenchmark as a Design.
+
+        The vectorization factor is the SIMD width, exactly as in the paper
+        (``#ga`` reads + one write, write-ACK stores replicated ``simd``
+        times, atomics one unit per GA).
+        """
+        lsus = _apps.microbench(
+            lsu_type, n_ga=n_ga, simd=simd, n_elems=n_elems,
+            delta=delta if lsu_type in _STRIDE_TYPES else 1,
+            elem_bytes=elem_bytes, include_write=include_write,
+            val_constant=val_constant)
+        return cls(lsus=tuple(lsus), dram=dram, bsp=bsp, f=simd,
+                   name=name or f"microbench-{lsu_type.value}-ga{n_ga}")
+
+    @classmethod
+    def from_app(cls, app: str, n_elems: int, *,
+                 dram: DramParams | None = None,
+                 bsp: BspParams | None = None) -> "Design":
+        """One of the paper's Table IV applications (``repro.core.apps.APPS``)."""
+        desc = _apps.APPS[app]
+        return cls(lsus=tuple(desc.lsus(n_elems)), dram=dram, bsp=bsp,
+                   f=desc.simd, name=app)
+
+    @classmethod
+    def from_classes(cls, bytes_by_class: Mapping[str, float], *,
+                     access_bytes: int | None = None, flops: float = 0.0,
+                     name: str = "") -> "Design":
+        """Design from access-class byte totals (the HLO counter's output).
+
+        Uses the same class -> LSU-type mapping the validation harness uses
+        (stream -> aligned, strided -> non-aligned, gather/serialized ->
+        write-ACK), preserving total traffic at ``access_bytes`` granularity.
+        """
+        from repro.core import validate as _validate
+
+        lsus = _validate.lsus_from_classes(
+            dict(bytes_by_class),
+            access_bytes=access_bytes or _validate.ACCESS_BYTES)
+        return cls(lsus=tuple(lsus), flops=flops, name=name)
+
+    @classmethod
+    def from_hlo(cls, hlo_text: str, *, access_bytes: int | None = None,
+                 name: str = "") -> "Design":
+        """Design read off compiled HLO text (``compiled.as_text()``).
+
+        The transplant of reading the HLS early report: the trip-count-aware
+        HLO counter classifies the executable's memory traffic, and each
+        access class becomes one LSU group.
+        """
+        from repro.core import hlo_counter as _hc
+
+        hc = _hc.analyze(hlo_text)
+        return cls.from_classes(dict(hc.bytes_by_class),
+                                access_bytes=access_bytes,
+                                flops=float(hc.flops), name=name)
+
+    @classmethod
+    def from_kernel(cls, fn: Callable, *args, name: str = "",
+                    access_bytes: int | None = None) -> "Design":
+        """Design from a jax-jittable callable: lower + compile + analyze.
+
+        ``fn`` may be a plain function (it is jitted here) or an already
+        jitted/lowered one; ``args`` are example arguments or
+        ``jax.ShapeDtypeStruct`` specs.  Requires jax.
+        """
+        import jax
+
+        jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+        compiled = jitted.lower(*args).compile()
+        return cls.from_hlo(compiled.as_text(), access_bytes=access_bytes,
+                            name=name or getattr(fn, "__name__", "kernel"))
+
+    # -- builder-style derivation ------------------------------------------
+
+    def with_dram(self, dram: DramParams) -> "Design":
+        return dataclasses.replace(self, dram=dram)
+
+    def with_bsp(self, bsp: BspParams) -> "Design":
+        return dataclasses.replace(self, bsp=bsp)
+
+    def with_f(self, f: int) -> "Design":
+        return dataclasses.replace(self, f=f)
+
+    def with_name(self, name: str) -> "Design":
+        return dataclasses.replace(self, name=name)
+
+    def with_lsus(self, lsus: Iterable[Lsu]) -> "Design":
+        """Replace the LSU list wholesale."""
+        return dataclasses.replace(self, lsus=tuple(lsus))
+
+    def with_access(self, lsu_type: LsuType, *, n_elems: int,
+                    elem_bytes: int = 4, f: int | None = None,
+                    delta: int = 1, is_write: bool = False,
+                    val_constant: bool = False, name: str = "") -> "Design":
+        """Append one source-level global access (expanded to its LSUs)."""
+        extra = make_global_access(
+            lsu_type, n_elems=n_elems, elem_bytes=elem_bytes,
+            f=self.f if f is None else f, delta=delta, is_write=is_write,
+            val_constant=val_constant, name=name)
+        return dataclasses.replace(self, lsus=self.lsus + tuple(extra))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_lsu(self) -> int:
+        """Number of LSUs that issue DRAM traffic."""
+        return sum(1 for l in self.lsus if l.lsu_type.is_global)
+
+    @property
+    def total_bytes(self) -> int:
+        """Useful bytes the design moves (sum over global LSUs)."""
+        return sum(l.total_bytes for l in self.lsus if l.lsu_type.is_global)
+
+    @property
+    def resource_bytes(self) -> int:
+        """Total LSU interconnect width [B] — the sweep resource objective."""
+        return sum(l.ls_width for l in self.lsus if l.lsu_type.is_global)
+
+
+# ---------------------------------------------------------------------------
+# Space: a declarative design space
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Space:
+    """A design space over the microbenchmark axes (``sweep.AXES``).
+
+    ``Space.grid(**axes)`` is the full Cartesian product; ``Space.random(n,
+    seed=..., **axes)`` samples ``n`` points (2-tuples = inclusive integer
+    ranges).  Axes left unset default to the session's hardware and the
+    sweep-engine defaults at evaluation time.
+    """
+
+    axes: Mapping[str, Any]
+    n: int | None = None       # None -> full grid
+    seed: int = 0
+
+    @classmethod
+    def grid(cls, **axes) -> "Space":
+        return cls(axes=dict(axes))
+
+    @classmethod
+    def random(cls, n: int, *, seed: int = 0, **axes) -> "Space":
+        if n < 1:
+            raise ValueError("a random space needs n >= 1 samples")
+        return cls(axes=dict(axes), n=int(n), seed=int(seed))
+
+    @property
+    def is_grid(self) -> bool:
+        return self.n is None
+
+    def points(self, *, dram: DramParams, bsp: BspParams,
+               ) -> tuple[dict[str, np.ndarray], int, dict]:
+        """Materialize per-point axis arrays, defaulting hardware axes."""
+        axes = dict(self.axes)
+        axes.setdefault("dram", dram)
+        axes.setdefault("bsp", bsp)
+        if self.is_grid:
+            return _sweep._grid_points(axes)
+        return _sweep._random_points(self.n, self.seed, axes)
+
+
+# ---------------------------------------------------------------------------
+# The shared result family
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    """One design point's model output — the family's scalar member.
+
+    The same fields come out of every backend; ``per_lsu`` carries the
+    readable per-LSU breakdown when the scalar backend produced it.
+    """
+
+    t_exe: float                  # Eq. 1 [s]
+    t_ideal: float                # bandwidth floor [s]
+    t_ovh: float                  # row-miss/ACK/atomic overhead [s]
+    bound_ratio: float            # LHS of Eq. 3
+    memory_bound: bool
+    total_bytes: float
+    n_lsu: int
+    backend: str = "scalar"
+    design: "Design | None" = None
+    per_lsu: tuple = ()
+
+    @property
+    def effective_bandwidth(self) -> float:
+        """Useful bytes / predicted time [B/s]."""
+        return self.total_bytes / self.t_exe if self.t_exe > 0 else math.inf
+
+    def row(self) -> dict:
+        return {
+            "design": self.design.name if self.design else "",
+            "t_exe_ms": self.t_exe * 1e3,
+            "t_ideal_ms": self.t_ideal * 1e3,
+            "t_ovh_ms": self.t_ovh * 1e3,
+            "bound_ratio": self.bound_ratio,
+            "memory_bound": bool(self.memory_bound),
+            "eff_bw_gbs": self.effective_bandwidth / 1e9,
+            "total_bytes": self.total_bytes,
+            "backend": self.backend,
+        }
+
+
+def _estimate_row(est: "_mb.BatchEstimate", i: int, *, backend: str,
+                  scale: float = 1.0,
+                  design: "Design | None" = None) -> Estimate:
+    """Row ``i`` of a BatchEstimate as an :class:`Estimate` (the one place
+    that knows the field-by-field extraction)."""
+    return Estimate(
+        t_exe=float(np.asarray(est.t_exe)[i]) * scale,
+        t_ideal=float(np.asarray(est.t_ideal)[i]) * scale,
+        t_ovh=float(np.asarray(est.t_ovh)[i]) * scale,
+        bound_ratio=float(np.asarray(est.bound_ratio)[i]),
+        memory_bound=bool(np.asarray(est.memory_bound)[i]),
+        total_bytes=float(np.asarray(est.total_bytes)[i]),
+        n_lsu=int(np.asarray(est.n_lsu)[i]),
+        backend=backend, design=design)
+
+
+class Report:
+    """Mixin of the shared report protocol: ``rows`` / ``to_csv`` / ``summary``.
+
+    Every Session method that scores more than one thing returns a Report
+    subclass, so downstream tooling (benchmarks, CI artifacts, notebooks)
+    consumes one shape regardless of which pipeline stage produced it.
+    """
+
+    kind: str = "report"
+
+    def rows(self) -> list[dict]:  # pragma: no cover — abstract
+        raise NotImplementedError
+
+    def to_csv(self) -> str:
+        rows = self.rows()
+        if not rows:
+            return ""
+        import csv
+        import io
+
+        fields = list(rows[0].keys())
+        seen = set(fields)
+        for r in rows[1:]:         # failure rows may carry extra keys
+            fields += [k for k in r if k not in seen]
+            seen.update(r)
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=fields, restval="")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+        return buf.getvalue()
+
+    def summary(self) -> dict:
+        return {"kind": self.kind, "rows": len(self.rows())}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepReport(_sweep.SweepResult, Report):
+    """Scored design space (a :class:`~repro.core.sweep.SweepResult` that is
+    also a :class:`Report`), tagged with the backend that scored it."""
+
+    backend: str = "numpy-batch"
+    kind = "sweep"
+
+    def estimates(self, indices: Sequence[int] | None = None,
+                  ) -> list[Estimate]:
+        """Per-point :class:`Estimate` objects (default: all points)."""
+        if indices is None:
+            indices = range(self.n_points)
+        return [_estimate_row(self.estimate, int(i), backend=self.backend)
+                for i in indices]
+
+    def best(self) -> Estimate:
+        """The fastest design point of the space."""
+        return self.estimates([int(np.argmin(self.t_exe))])[0]
+
+    def summary(self) -> dict:
+        return {
+            "kind": self.kind, "backend": self.backend,
+            "n_points": self.n_points,
+            "memory_bound_points": int(np.asarray(self.memory_bound).sum()),
+            "pareto_points": int(len(self.pareto())),
+            "t_exe_min_ms": float(np.min(self.t_exe)) * 1e3,
+        }
+
+
+class AutotuneReport(Report):
+    """Ranked autotune results as a Report (wraps ``AutotuneResults``)."""
+
+    kind = "autotune"
+
+    def __init__(self, results):
+        self.results = list(results)
+        self.failures = list(getattr(results, "failures", []))
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
+    @property
+    def best(self):
+        return self.results[0] if self.results else None
+
+    def rows(self) -> list[dict]:
+        return ([t.summary() for t in self.results]
+                + [f.summary() for f in self.failures])
+
+    def summary(self) -> dict:
+        return {"kind": self.kind, "candidates": len(self.results),
+                "failures": len(self.failures),
+                "best": self.best.candidate.name if self.best else None}
+
+
+class ValidateReport(Report):
+    """Measured-vs-predicted validation as a Report.
+
+    Wraps :class:`repro.core.validate.ValidationReport`, exposing its fields
+    (``results``, ``failures``, ``dram``, ``measured_bw``,
+    ``calibration_factor``) unchanged.
+    """
+
+    kind = "validate"
+
+    def __init__(self, report):
+        self.raw = report
+        self.results = report.results
+        self.failures = report.failures
+        self.dram = report.dram
+        self.measured_bw = report.measured_bw
+        self.calibration_factor = report.calibration_factor
+
+    @property
+    def max_err_pct(self) -> float:
+        return self.raw.max_err_pct
+
+    def rows(self) -> list[dict]:
+        return self.raw.rows()
+
+    def summary(self) -> dict:
+        return {"kind": self.kind, "kernels": len(self.results),
+                "failures": len(self.failures),
+                "measured_bw_gbs": self.measured_bw / 1e9,
+                "calibration_factor": self.calibration_factor,
+                "max_err_pct": self.max_err_pct}
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport(Report):
+    """Roofline placement of one design: memory vs compute terms."""
+
+    design: Design
+    estimate: Estimate
+    t_memory: float               # the Eqs. 1-10 memory time [s]
+    t_compute: float              # flops / peak_flops (0 when flops unknown)
+    ridge_flops_per_byte: float   # the hw ridge point
+    arithmetic_intensity: float   # flops / useful bytes
+    peak_bw: float                # hw peak memory bandwidth [B/s]
+    kind = "roofline"
+
+    @property
+    def t_exe(self) -> float:
+        """Roofline time: the slower of the two resources."""
+        return max(self.t_memory, self.t_compute)
+
+    @property
+    def bottleneck(self) -> str:
+        return "memory" if self.t_memory >= self.t_compute else "compute"
+
+    @property
+    def memory_bound(self) -> bool:
+        return self.bottleneck == "memory"
+
+    def rows(self) -> list[dict]:
+        return [{
+            "design": self.design.name,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_compute_ms": self.t_compute * 1e3,
+            "bottleneck": self.bottleneck,
+            "arithmetic_intensity": self.arithmetic_intensity,
+            "ridge_flops_per_byte": self.ridge_flops_per_byte,
+            "eff_bw_gbs": self.estimate.effective_bandwidth / 1e9,
+            "peak_bw_gbs": self.peak_bw / 1e9,
+            "bound_ratio": self.estimate.bound_ratio,
+        }]
+
+
+# ---------------------------------------------------------------------------
+# Session: hardware + calibration + backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Session:
+    """Evaluation context every pipeline stage runs in.
+
+    * ``dram``/``bsp`` — the faithful FPGA-model hardware (paper Table III),
+      used unless a :class:`Design` carries its own override;
+    * ``hw`` — the TPU-transplant parameters (autotune/predict/roofline
+      compute term);
+    * ``backend`` — how estimates are computed: ``scalar`` (readable
+      reference loop), ``numpy-batch`` (vectorized array core, default) or
+      ``jax-jit`` (the same core under ``jax.jit``, x64);
+    * ``calibration_factor`` — a single measured/modeled scale fitted by
+      ``validate`` (1.0 = uncalibrated); all estimated times are multiplied
+      by it, so a session calibrated on a stream anchor predicts in
+      host-measured seconds.
+    """
+
+    dram: DramParams = DDR4_1866
+    bsp: BspParams = STRATIX10_BSP
+    hw: TpuParams = TPU_V5E
+    backend: str = "numpy-batch"
+    calibration_factor: float = 1.0
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; pick one of {BACKENDS}")
+        if not (self.calibration_factor > 0
+                and math.isfinite(self.calibration_factor)):
+            raise ValueError("calibration_factor must be finite and > 0")
+
+    # -- derivation ---------------------------------------------------------
+
+    def with_backend(self, backend: str) -> "Session":
+        return dataclasses.replace(self, backend=backend)
+
+    def with_dram(self, dram: DramParams) -> "Session":
+        return dataclasses.replace(self, dram=dram)
+
+    def with_calibration(self, report: "ValidateReport") -> "Session":
+        """Session re-anchored on a validation report's fitted bandwidth and
+        host factor — subsequent estimates predict measured seconds."""
+        return dataclasses.replace(
+            self, dram=report.dram,
+            calibration_factor=float(report.calibration_factor))
+
+    def _hw_for(self, design: Design) -> tuple[DramParams, BspParams]:
+        return design.dram or self.dram, design.bsp or self.bsp
+
+    # -- estimate -----------------------------------------------------------
+
+    def estimate(self, design: Design) -> Estimate:
+        """Eqs. 1-10 for one design, on this session's backend."""
+        dram, bsp = self._hw_for(design)
+        if self.backend == "scalar":
+            ke = _model._estimate(list(design.lsus), dram, bsp, f=design.f)
+            c = self.calibration_factor
+            return Estimate(
+                t_exe=ke.t_exe * c, t_ideal=ke.t_ideal * c,
+                t_ovh=ke.t_ovh * c, bound_ratio=ke.bound_ratio,
+                memory_bound=ke.memory_bound,
+                total_bytes=float(ke.total_bytes), n_lsu=len(ke.per_lsu),
+                backend=self.backend, design=design, per_lsu=ke.per_lsu)
+        return self.estimate_many([design])[0]
+
+    def estimate_many(self, designs: Sequence[Design]) -> list[Estimate]:
+        """Score many heterogeneous designs in one batched pass."""
+        if not designs:
+            return []
+        if self.backend == "scalar":
+            return [self.estimate(d) for d in designs]
+        hw = [self._hw_for(d) for d in designs]
+        batch = _mb.GroupBatch.from_kernels(
+            [list(d.lsus) for d in designs],
+            [h[0] for h in hw], [h[1] for h in hw],
+            f=[d.f for d in designs])
+        est = self._estimator()(batch)
+        return [_estimate_row(est, i, backend=self.backend,
+                              scale=self.calibration_factor,
+                              design=designs[i])
+                for i in range(len(designs))]
+
+    # -- sweep --------------------------------------------------------------
+
+    def sweep(self, space: "Space | Mapping[str, Any] | None" = None,
+              **axes) -> SweepReport:
+        """Score a whole design space through this session's backend.
+
+        Accepts a :class:`Space`, a plain axes mapping (treated as a grid),
+        or keyword axes directly: ``sess.sweep(n_ga=[1, 2], simd=[4, 16])``.
+        """
+        if space is None:
+            space = Space.grid(**axes)
+        elif axes:
+            raise TypeError("pass either a Space/mapping or keyword axes, "
+                            "not both")
+        if isinstance(space, Mapping):
+            space = Space.grid(**space)
+        points, n, cats = space.points(dram=self.dram, bsp=self.bsp)
+        if self.backend == "scalar":
+            result = self._sweep_scalar(points, n, cats)
+        else:
+            result = _sweep._build(points, n, cats,
+                                   estimator=self._estimator())
+        est = result.estimate
+        if self.calibration_factor != 1.0:
+            c = self.calibration_factor
+            est = dataclasses.replace(
+                est, t_exe=np.asarray(est.t_exe) * c,
+                t_ideal=np.asarray(est.t_ideal) * c,
+                t_ovh=np.asarray(est.t_ovh) * c)
+        return SweepReport(points=result.points, estimate=est,
+                           resource=result.resource, backend=self.backend)
+
+    def _sweep_scalar(self, points: dict, n: int, cats: dict,
+                      ) -> _sweep.SweepResult:
+        """Reference scalar loop over the same points `_build` would score.
+
+        Each point expands through ``apps.microbench`` (the proven-equal
+        scalar path); inert axes are normalized exactly like ``_build`` so
+        the reported configurations match across backends.
+        """
+        lsu_types = [points["lsu_type"][i] for i in range(n)]
+        is_atomic = np.array([t is LsuType.ATOMIC_PIPELINED
+                              for t in lsu_types])
+        is_ack = np.array([t is LsuType.BC_WRITE_ACK for t in lsu_types])
+        points = _sweep._normalize_inert_axes(points, is_atomic, is_ack)
+        delta = points["delta"]
+        val_constant = points["val_constant"]
+        include_write = points["include_write"]
+
+        cols = {k: np.empty(n) for k in
+                ("t_exe", "t_ideal", "t_ovh", "bound_ratio", "total_bytes")}
+        memory_bound = np.empty(n, dtype=bool)
+        n_lsu = np.empty(n, dtype=np.int64)
+        resource = np.empty(n)
+        for i in range(n):
+            design = Design.microbench(
+                lsu_types[i],
+                n_ga=int(points["n_ga"][i]),
+                simd=int(points["simd"][i]),
+                n_elems=int(points["n_elems"][i]),
+                delta=int(delta[i]),
+                elem_bytes=int(points["elem_bytes"][i]),
+                include_write=bool(include_write[i]),
+                val_constant=bool(val_constant[i]),
+                dram=points["dram"][i], bsp=points["bsp"][i])
+            ke = _model._estimate(list(design.lsus), design.dram, design.bsp,
+                                  f=design.f)
+            cols["t_exe"][i] = ke.t_exe
+            cols["t_ideal"][i] = ke.t_ideal
+            cols["t_ovh"][i] = ke.t_ovh
+            cols["bound_ratio"][i] = ke.bound_ratio
+            cols["total_bytes"][i] = ke.total_bytes
+            memory_bound[i] = ke.memory_bound
+            n_lsu[i] = len(ke.per_lsu)
+            resource[i] = design.resource_bytes
+        est = _mb.BatchEstimate(
+            t_exe=cols["t_exe"], t_ideal=cols["t_ideal"],
+            t_ovh=cols["t_ovh"], bound_ratio=cols["bound_ratio"],
+            memory_bound=memory_bound, total_bytes=cols["total_bytes"],
+            n_lsu=n_lsu, groups={})
+        return _sweep.SweepResult(points=points, estimate=est,
+                                  resource=resource)
+
+    # -- backend plumbing ---------------------------------------------------
+
+    def _estimator(self) -> Callable[[_mb.GroupBatch], _mb.BatchEstimate]:
+        if self.backend == "jax-jit":
+            return _jax_estimate_batch
+        return _mb.estimate_batch
+
+    # -- the rest of the pipeline ------------------------------------------
+
+    def autotune(self, cfg, shape, mesh, candidates=None, *,
+                 cache=True, gather_row_bytes: float = 512.0,
+                 ) -> AutotuneReport:
+        """Model-guided candidate ranking (lower+compile on CPU, no TPU)."""
+        from repro.core import autotune as _at
+
+        return AutotuneReport(_at._autotune(
+            cfg, shape, mesh, candidates, self.hw, cache=cache,
+            gather_row_bytes=gather_row_bytes))
+
+    def validate(self, cases=None, *, iters: int = 3, warmup: int = 1,
+                 calibrate: bool = True) -> ValidateReport:
+        """Measured-vs-predicted loop over the Pallas kernels.
+
+        With ``calibrate=True`` (default) the stream anchor fits the
+        effective bandwidth and a host factor, the paper's methodology.
+        With ``calibrate=False`` predictions come from this session's own
+        ``dram`` parameters alone — no measured wall-clock enters the
+        prediction side, so repeated runs predict identically.
+        """
+        from repro.core import validate as _validate
+
+        rep = _validate._validate(
+            cases, iters=iters, warmup=warmup,
+            dram=None if calibrate else self.dram, base=self.dram,
+            fit_host_factor=calibrate)
+        return ValidateReport(rep)
+
+    def roofline(self, design: Design) -> RooflineReport:
+        """Place one design on the roofline: Eqs. 1-10 memory time vs the
+        compute floor (``flops / hw.peak_flops``; 0 when flops unknown)."""
+        est = self.estimate(design)
+        t_compute = design.flops / self.hw.peak_flops
+        ai = (design.flops / est.total_bytes if est.total_bytes
+              else math.inf if design.flops else 0.0)
+        dram, _ = self._hw_for(design)
+        return RooflineReport(
+            design=design, estimate=est,
+            t_memory=est.t_exe, t_compute=t_compute,
+            ridge_flops_per_byte=self.hw.ridge_flops_per_byte,
+            arithmetic_intensity=ai, peak_bw=dram.bw_mem)
+
+    def predict(self, hlo_text: str, cost: dict | None = None, *,
+                gather_row_bytes: float = 512.0):
+        """TPU-transplant step prediction from compiled HLO text
+        (:func:`repro.core.predictor.predict_step` under this session's hw)."""
+        from repro.core import predictor as _pred
+
+        return _pred.predict_step(hlo_text, cost, self.hw,
+                                  gather_row_bytes=gather_row_bytes)
+
+
+# ---------------------------------------------------------------------------
+# jax-jit backend
+# ---------------------------------------------------------------------------
+
+_JAX_FN = None
+
+
+def _jax_estimate_batch(batch: _mb.GroupBatch) -> _mb.BatchEstimate:
+    """The array core under ``jax.jit`` with x64 — numerically equal to the
+    NumPy path (same ops, same dtype), returned as NumPy arrays."""
+    global _JAX_FN
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    _mb.enable_jax()
+    if _JAX_FN is None:
+        def _run(b):
+            est = _mb.estimate_batch(b, xp=jnp)
+            return {"t_exe": est.t_exe, "t_ideal": est.t_ideal,
+                    "t_ovh": est.t_ovh, "bound_ratio": est.bound_ratio,
+                    "memory_bound": est.memory_bound,
+                    "total_bytes": est.total_bytes, "n_lsu": est.n_lsu,
+                    "groups": est.groups}
+        _JAX_FN = jax.jit(_run)
+    with enable_x64():
+        jb = _mb.GroupBatch(**{
+            f.name: (batch.n_kernels if f.name == "n_kernels"
+                     else jnp.asarray(getattr(batch, f.name)))
+            for f in dataclasses.fields(_mb.GroupBatch)})
+        out = jax.tree_util.tree_map(np.asarray, _JAX_FN(jb))
+    groups = out.pop("groups")
+    return _mb.BatchEstimate(**out, groups=groups)

@@ -1,22 +1,28 @@
-"""Core: the paper's analytical memory model.
+"""Core: the paper's analytical memory model (implementation layer).
+
+The *public* surface is :mod:`repro.api` (``Design`` / ``Session`` /
+``Space`` and the shared ``Estimate``/``Report`` family); the modules below
+implement it.  The pre-PR-3 entry points re-exported here (``estimate``,
+``sweep_grid``, ``sweep_random``) are deprecated shims kept for one release.
 
 Faithful FPGA/HLS layer (paper Eqs. 1-10):
     fpga        -- DRAM/BSP parameter sets (Table III)
     lsu         -- LSU taxonomy (Table I) and descriptors (Table II)
-    model       -- T_exe estimation + memory-bound criterion (scalar API)
+    model       -- T_exe estimation + memory-bound criterion (scalar core)
     model_batch -- array-based core of the same equations (vectorized)
     sweep       -- design-space sweeps: grid/random scoring + Pareto fronts
     dramsim     -- event-driven DRAM oracle (board substitute)
     baselines   -- Wang [6] / HLScope+ [7] comparison models
     apps        -- Table IV applications + SIV microbenchmarks
     cache       -- on-disk cache of compiled-HLO analyses (autotune)
+    validate    -- measured-vs-predicted loop (Session.validate)
 
 TPU/XLA adaptation layer (DESIGN.md S2):
     hbm       -- access-class taxonomy + HBM/ICI parameters
     hlo       -- compiled-HLO traffic extraction (memory + collectives)
     predictor -- lowered step -> classified traffic -> time prediction
     roofline  -- three-term roofline report
-    autotune  -- model-guided configuration search
+    autotune  -- model-guided configuration search (Session.autotune)
 """
 
 from repro.core.fpga import DDR4_1866, DDR4_2666, BspParams, DramParams, STRATIX10_BSP

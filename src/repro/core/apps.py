@@ -144,7 +144,7 @@ class AppDescriptor:
         """
         ref = APPS[self.calibrate_to] if self.calibrate_to else self
         probe = 1 << 20
-        t_probe = _model.estimate(ref.lsus(probe), dram, bsp).t_exe
+        t_probe = _model._estimate(ref.lsus(probe), dram, bsp).t_exe
         scale = (ref.paper_est_ms * 1e-3) / t_probe
         n = int(round(probe * scale / self.simd)) * self.simd
         return max(self.simd, n)
@@ -186,7 +186,7 @@ def table4_rows(dram: DramParams = DDR4_1866,
     rows = []
     for app in APPS.values():
         n = app.calibrated_elems(dram, bsp)
-        est = _model.estimate(app.lsus(n), dram, bsp)
+        est = _model._estimate(app.lsus(n), dram, bsp)
         est_ms = est.t_exe * 1e3
         err = abs(est_ms - app.measured_ms) / app.measured_ms * 100.0
         rows.append({

@@ -124,7 +124,6 @@ def _code_fingerprint() -> str:
         import repro
 
         h = hashlib.sha256()
-        # repro is a namespace package (no __init__.py): use __path__.
         # kernels/ is included recursively: models lazily route through the
         # Pallas kernels, so a kernel edit changes the compiled step too.
         root = pathlib.Path(next(iter(repro.__path__)))
@@ -284,10 +283,10 @@ def run_trial(cfg, shape, mesh, candidate: Candidate,
                        cached=bool(rec.get("cached")))
 
 
-def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
-             hw: TpuParams = TPU_V5E, *,
-             cache: HloAnalysisCache | bool | None = True,
-             gather_row_bytes: float = 512.0) -> AutotuneResults:
+def _autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
+              hw: TpuParams = TPU_V5E, *,
+              cache: HloAnalysisCache | bool | None = True,
+              gather_row_bytes: float = 512.0) -> AutotuneResults:
     """Rank candidates by predicted step time (ascending).
 
     Per-candidate compiles go through the on-disk analysis cache (pass
@@ -338,3 +337,16 @@ def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
                     cached=bool(records[i].get("cached")))
         for i in scores["order"]
     ], failures)
+
+
+def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
+             hw: TpuParams = TPU_V5E, *,
+             cache: HloAnalysisCache | bool | None = True,
+             gather_row_bytes: float = 512.0) -> AutotuneResults:
+    """Deprecated: use ``repro.Session(hw=...).autotune(cfg, shape, mesh)``."""
+    from repro.deprecation import warn_deprecated
+
+    warn_deprecated("repro.core.autotune.autotune()",
+                    "repro.Session(hw=...).autotune(cfg, shape, mesh, ...)")
+    return _autotune(cfg, shape, mesh, candidates, hw, cache=cache,
+                     gather_row_bytes=gather_row_bytes)

@@ -177,7 +177,7 @@ def memory_bound_ratio(lsus: Sequence[Lsu], dram: DramParams) -> float:
     return sum(lsu.ls_width / (dram.min_burst_bytes * k_lsu(lsu)) for lsu in lsus)
 
 
-def estimate(
+def _estimate(
     lsus: Sequence[Lsu],
     dram: DramParams,
     bsp: BspParams = STRATIX10_BSP,
@@ -189,8 +189,8 @@ def estimate(
     Thin scalar wrapper over the array core: each LSU runs through the same
     `model_batch.group_timing` math, on plain Python scalars (the
     `SCALAR_XP` namespace shim keeps the call as cheap as the old scalar
-    code).  Use `repro.core.sweep` to score thousands of design points in
-    one vectorized pass of the identical equations.
+    code).  This is the implementation behind ``Session(backend="scalar")``;
+    the public surface is ``repro.Session.estimate(repro.Design(...))``.
     """
     from repro.core import model_batch as _mb
 
@@ -226,6 +226,21 @@ def estimate(
         bound_ratio=float(ratio),
         per_lsu=tuple(timings),
     )
+
+
+def estimate(
+    lsus: Sequence[Lsu],
+    dram: DramParams,
+    bsp: BspParams = STRATIX10_BSP,
+    *,
+    f: int = 1,
+) -> KernelEstimate:
+    """Deprecated: use ``repro.Session(...).estimate(repro.Design(lsus))``."""
+    from repro.deprecation import warn_deprecated
+
+    warn_deprecated("repro.core.model.estimate()",
+                    "repro.Session(...).estimate(repro.Design(...))")
+    return _estimate(lsus, dram, bsp, f=f)
 
 
 def pipeline_time(

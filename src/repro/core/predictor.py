@@ -1,6 +1,8 @@
 """Step-time prediction from compiled (never executed) artifacts.
 
-`predict()` is the paper's Eq. 1 pipeline transplanted (DESIGN.md S2):
+`predict_step()` is the paper's Eq. 1 pipeline transplanted (DESIGN.md S2);
+the public surface is ``repro.Session.predict`` (the old module-level
+``predict`` name is a deprecated alias):
 
   1. statically analyze the compiled module with the trip-count-aware HLO
      counter (`hlo_counter.analyze` -- the LSU-type report reader; XLA's own
@@ -80,7 +82,7 @@ def components_from_cost(hc: _hc.HloCost, *,
     return out
 
 
-def predict(
+def predict_step(
     hlo_text: str,
     cost: dict | None = None,
     hw: TpuParams = TPU_V5E,
@@ -106,3 +108,18 @@ def predict(
         collective_by_kind=dict(hc.collective_by_kind),
         xla_cost=dict(cost or {}),
     )
+
+
+def predict(
+    hlo_text: str,
+    cost: dict | None = None,
+    hw: TpuParams = TPU_V5E,
+    *,
+    gather_row_bytes: float = 512.0,
+) -> StepPrediction:
+    """Deprecated: use ``repro.Session(hw=...).predict(hlo_text, cost)``."""
+    from repro.deprecation import warn_deprecated
+
+    warn_deprecated("repro.core.predictor.predict()",
+                    "repro.Session(hw=...).predict(hlo_text, cost)")
+    return predict_step(hlo_text, cost, hw, gather_row_bytes=gather_row_bytes)

@@ -8,7 +8,7 @@ compiled SPMD module *is* the per-chip program):
     collective term = collective_bytes     / link_bw              [s]
 
 plus the refined memory term from the paper's access-class model
-(``predictor.predict``) and bookkeeping:
+(``predictor.predict_step``) and bookkeeping:
 
     MODEL_FLOPS     = 6 * N(_active) * D   (train)  /  2 * N * D  (serve)
     MODEL_BYTES     = algorithmic-minimum HBM traffic (config.model_bytes)
@@ -129,7 +129,7 @@ def build_cell(
 ) -> RooflineCell:
     """Cell from compiled HLO text (trip-aware static analysis; the raw
     ``cost_analysis`` dict is kept in ``extra`` for cross-checking)."""
-    pred = _pred.predict(hlo_text, cost, hw)
+    pred = _pred.predict_step(hlo_text, cost, hw)
     flops = pred.flops
     nbytes = pred.hbm_bytes
     extra = dict(extra or {})

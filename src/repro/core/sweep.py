@@ -7,28 +7,33 @@ workflow: describe a design space over the SIV microbenchmark knobs — LSU
 type, number of global accesses, SIMD width, input size, stride, element
 size, DRAM part, BSP variant — and score every point in one pass.
 
-    >>> from repro.core.sweep import sweep_grid
-    >>> res = sweep_grid(lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_WRITE_ACK],
-    ...                  n_ga=[1, 2, 4], simd=[1, 4, 16],
-    ...                  delta=[1, 2, 4], dram=[DDR4_1866, DDR4_2666])
+The public entry points are :class:`repro.Space` and
+``repro.Session.sweep``:
+
+    >>> from repro import Session, Space
+    >>> res = Session().sweep(Space.grid(
+    ...     lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_WRITE_ACK],
+    ...     n_ga=[1, 2, 4], simd=[1, 4, 16],
+    ...     delta=[1, 2, 4], dram=[DDR4_1866, DDR4_2666]))
     >>> best = res.top_k(5)
     >>> front = res.pareto()          # time vs interconnect-width cost
 
-Every design point maps to exactly the LSU list `apps.microbench` would
-build, so batched results match the scalar ``estimate(microbench(...))``
-path element-wise (tested to rtol 1e-6 in tests/test_sweep.py).
+``sweep_grid``/``sweep_random`` below are deprecated aliases of that path,
+kept for one release.  Every design point maps to exactly the LSU list
+`apps.microbench` would build, so batched results match the scalar
+estimate path element-wise (tested to rtol 1e-6 in tests/test_sweep.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
 from repro.core import model_batch as _mb
 from repro.core.fpga import BspParams, DramParams, DDR4_1866, STRATIX10_BSP
 from repro.core.lsu import LsuType
+from repro.deprecation import warn_deprecated
 
 #: Sweepable axes, in canonical order.  ``lsu_type``/``dram``/``bsp`` are
 #: categorical; the rest are numeric.
@@ -63,18 +68,21 @@ def pareto_front(values: np.ndarray) -> np.ndarray:
     # Lexicographic order makes any dominator of row i appear before i, so a
     # single forward scan against the kept front is complete.
     order = np.lexsort(tuple(vals[:, d] for d in range(vals.shape[1] - 1, -1, -1)))
-    front_vals: list[np.ndarray] = []
+    # The front lives in a preallocated [n, d] buffer filled left to right;
+    # each candidate is checked against the fv[:m] *view*, so keeping a point
+    # is O(F) instead of the former copy-the-front-per-point O(F^2).
+    fv = np.empty_like(vals)
+    m = 0
     keep: list[int] = []
-    fv = np.empty((0, vals.shape[1]))
     for idx in order:
         v = vals[idx]
-        if len(keep):
-            dominated = np.any((fv <= v).all(axis=1) & (fv < v).any(axis=1))
-            if dominated:
+        if m:
+            front = fv[:m]
+            if np.any((front <= v).all(axis=1) & (front < v).any(axis=1)):
                 continue
+        fv[m] = v
+        m += 1
         keep.append(int(idx))
-        front_vals.append(v)
-        fv = np.asarray(front_vals)
     return np.asarray(sorted(keep), dtype=np.int64)
 
 
@@ -188,9 +196,36 @@ def _factorize(objs) -> tuple[list, np.ndarray]:
     return table, codes
 
 
+def _normalize_inert_axes(points: dict[str, np.ndarray],
+                          is_atomic: np.ndarray,
+                          is_ack: np.ndarray) -> dict[str, np.ndarray]:
+    """Normalize axes that are inert for a point's LSU type.
+
+    Stride is inert for ACK/atomic, ``val_constant`` for non-atomics, and
+    ``include_write`` for atomics (the atomic *is* the write), so reported
+    configs describe exactly what was scored; grid products over inert axes
+    thus show up as *visibly* identical rows rather than phantom distinct
+    designs.  Shared by ``_build`` and the scalar Session backend — the two
+    paths must normalize identically for backend equivalence to hold.
+    """
+    delta = np.where(is_atomic | is_ack, 1,
+                     np.asarray(points["delta"], dtype=np.int64))
+    val_constant = np.asarray(points["val_constant"], dtype=bool) & is_atomic
+    include_write = (np.asarray(points["include_write"], dtype=bool)
+                     & ~is_atomic)
+    return {**points, "delta": delta, "val_constant": val_constant,
+            "include_write": include_write}
+
+
 def _build(points: dict[str, np.ndarray], n: int,
-           cats: dict[str, tuple[list, np.ndarray]] | None = None) -> SweepResult:
+           cats: dict[str, tuple[list, np.ndarray]] | None = None,
+           estimator: Callable[[_mb.GroupBatch], _mb.BatchEstimate] | None = None,
+           ) -> SweepResult:
     """Score ``n`` design points described by per-point axis arrays.
+
+    ``estimator`` maps the assembled :class:`model_batch.GroupBatch` to a
+    :class:`model_batch.BatchEstimate`; it defaults to the NumPy array core
+    and is how ``Session`` backends (jax-jit) plug into the same expansion.
 
     Each point expands to the LSU list ``apps.microbench`` would build,
     expressed as at most two homogeneous LSU *groups* per point:
@@ -229,13 +264,10 @@ def _build(points: dict[str, np.ndarray], n: int,
     is_atomic = type_codes == _mb.ATOMIC
     is_ack = type_codes == _mb.WRITE_ACK
 
-    # Normalize axes that are inert for a type (stride for ACK/atomic,
-    # val_constant for non-atomics) so reported configs describe exactly
-    # what was scored; grid products over inert axes thus show up as
-    # *visibly* identical rows rather than phantom distinct designs.
-    delta = np.where(is_atomic | is_ack, 1, delta)
-    val_constant = val_constant & is_atomic
-    points = {**points, "delta": delta, "val_constant": val_constant}
+    points = _normalize_inert_axes(points, is_atomic, is_ack)
+    delta = points["delta"]
+    val_constant = points["val_constant"]
+    include_write = points["include_write"]
 
     # Group 1: the read side (plus the same-type write for plain BC types).
     g1_type = np.where(is_ack, _mb.ALIGNED, type_codes)
@@ -267,7 +299,7 @@ def _build(points: dict[str, np.ndarray], n: int,
         f=vec([simd, simd]),
         **{k: vec([v, v]) for k, v in {**dram_f, **bsp_f}.items()},
     )
-    est = _mb.estimate_batch(batch)
+    est = (estimator or _mb.estimate_batch)(batch)
     resource = np.bincount(kernel,
                            weights=np.asarray(batch.count * batch.ls_width,
                                               dtype=np.float64),
@@ -294,15 +326,10 @@ def _normalize_axes(overrides: Mapping[str, Any]) -> dict[str, list]:
     return {k: _as_list(overrides.get(k, defaults[k])) for k in AXES}
 
 
-def sweep_grid(**axes) -> SweepResult:
-    """Score the full Cartesian product of the given axes in one pass.
-
-    Every axis (see ``AXES``) accepts a single value or a sequence; e.g.
-    ``sweep_grid(n_ga=[1, 2, 4], simd=[1, 16], dram=[DDR4_1866, DDR4_2666])``
-    scores 12 design points.  Stride applies to the burst-coalesced
-    aligned/non-aligned types only (write-ACK reads and atomics are stride-1
-    by construction, exactly like ``apps.microbench``).
-    """
+def _grid_points(axes: Mapping[str, Any],
+                 ) -> tuple[dict[str, np.ndarray], int,
+                            dict[str, tuple[list, np.ndarray]]]:
+    """Per-point axis arrays for the full Cartesian product of ``axes``."""
     lists = _normalize_axes(axes)
     sizes = [len(v) for v in lists.values()]
     n = int(np.prod(sizes))
@@ -318,17 +345,21 @@ def sweep_grid(**axes) -> SweepResult:
             cats[name] = (vals, idx)
         else:
             points[name] = np.asarray(vals)[idx]
-    return _build(points, n, cats)
+    return points, n, cats
 
 
-def sweep_random(n: int, *, seed: int = 0, **axes) -> SweepResult:
-    """Score ``n`` uniformly sampled design points.
+def _random_points(n: int, seed: int, axes: Mapping[str, Any],
+                   ) -> tuple[dict[str, np.ndarray], int,
+                              dict[str, tuple[list, np.ndarray]]]:
+    """Per-point axis arrays for ``n`` uniformly sampled design points.
 
     Numeric axes given as a 2-tuple ``(lo, hi)`` are sampled as integers in
     the inclusive range; any axis given as a list is sampled uniformly from
-    it; scalars are held fixed.  ``n_elems`` samples are rounded down to a
-    multiple of the LCM of the sampled ``simd`` values (floored at the LCM
-    itself) so every point stays divisible by its own ``simd``.
+    it; scalars are held fixed.  Each ``n_elems`` sample is rounded down to
+    a multiple of *that point's own* ``simd`` (floored at ``simd``), so the
+    sampled values stay inside the requested range whenever it contains any
+    multiple of the point's simd — rounding to the global LCM of all sampled
+    simd values could leave the range entirely.
     """
     rng = np.random.default_rng(seed)
     tuples = {k: v for k, v in axes.items()
@@ -350,7 +381,31 @@ def sweep_random(n: int, *, seed: int = 0, **axes) -> SweepResult:
                 cats[name] = (vals, idx)
             else:
                 points[name] = np.asarray(vals)[idx]
-    lcm = int(np.lcm.reduce(np.unique(points["simd"]).astype(np.int64)))
-    points["n_elems"] = np.maximum(
-        (np.asarray(points["n_elems"], dtype=np.int64) // lcm) * lcm, lcm)
-    return _build(points, n, cats)
+    simd = np.asarray(points["simd"], dtype=np.int64)
+    n_elems = np.asarray(points["n_elems"], dtype=np.int64)
+    points["n_elems"] = np.maximum((n_elems // simd) * simd, simd)
+    return points, n, cats
+
+
+def sweep_grid(**axes) -> SweepResult:
+    """Deprecated: use ``repro.Session().sweep(repro.Space.grid(**axes))``.
+
+    Scores the full Cartesian product of the given axes in one pass.  Every
+    axis (see ``AXES``) accepts a single value or a sequence; stride applies
+    to the burst-coalesced aligned/non-aligned types only (write-ACK reads
+    and atomics are stride-1 by construction, like ``apps.microbench``).
+    """
+    warn_deprecated("repro.core.sweep.sweep_grid()",
+                    "repro.Session().sweep(repro.Space.grid(...))")
+    return _build(*_grid_points(axes))
+
+
+def sweep_random(n: int, *, seed: int = 0, **axes) -> SweepResult:
+    """Deprecated: use ``repro.Session().sweep(repro.Space.random(n, ...))``.
+
+    Scores ``n`` uniformly sampled design points (see ``_random_points`` for
+    the sampling rules).
+    """
+    warn_deprecated("repro.core.sweep.sweep_random()",
+                    "repro.Session().sweep(repro.Space.random(n, ...))")
+    return _build(*_random_points(n, seed, axes))

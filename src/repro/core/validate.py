@@ -261,10 +261,11 @@ class ValidationReport:
         return [r.row() for r in self.results]
 
 
-def validate(cases: Sequence[ValidationCase] | None = None, *,
-             iters: int = 3, warmup: int = 1,
-             dram: DramParams | None = None,
-             base: DramParams = DDR4_1866) -> ValidationReport:
+def _validate(cases: Sequence[ValidationCase] | None = None, *,
+              iters: int = 3, warmup: int = 1,
+              dram: DramParams | None = None,
+              base: DramParams = DDR4_1866,
+              fit_host_factor: bool = True) -> ValidationReport:
     """Run the measured-vs-predicted loop over ``cases``.
 
     Pass ``dram`` to skip bandwidth calibration (reproducible tests);
@@ -274,9 +275,11 @@ def validate(cases: Sequence[ValidationCase] | None = None, *,
     backend-global costs the DRAM-scale model cannot see (interpret-mode
     interpreter overhead, CPU caches hiding row misses), so per-kernel
     errors measure the model's *relative* fidelity across kernels: the
-    paper's normalized-figure methodology.  A case that fails to
-    build/compile/run becomes a failure record, never an exception —
-    partial tables are still tables.
+    paper's normalized-figure methodology.  Pass ``fit_host_factor=False``
+    to report the model's raw predictions instead (no wall-clock enters the
+    prediction side, so repeated runs predict identically).  A case that
+    fails to build/compile/run becomes a failure record, never an
+    exception — partial tables are still tables.
     """
     import jax
 
@@ -318,7 +321,8 @@ def validate(cases: Sequence[ValidationCase] | None = None, *,
 
     anchor_idx = measured.index(anchor)
     factor = (anchor[1] / t_raw[anchor_idx]
-              if np.isfinite(t_raw[anchor_idx]) and t_raw[anchor_idx] > 0
+              if fit_host_factor and np.isfinite(t_raw[anchor_idx])
+              and t_raw[anchor_idx] > 0
               else 1.0)
 
     results = []
@@ -333,3 +337,15 @@ def validate(cases: Sequence[ValidationCase] | None = None, *,
         ))
     return ValidationReport(results, failures, dram, measured_bw,
                             calibration_factor=float(factor))
+
+
+def validate(cases: Sequence[ValidationCase] | None = None, *,
+             iters: int = 3, warmup: int = 1,
+             dram: DramParams | None = None,
+             base: DramParams = DDR4_1866) -> ValidationReport:
+    """Deprecated: use ``repro.Session(...).validate(cases)``."""
+    from repro.deprecation import warn_deprecated
+
+    warn_deprecated("repro.core.validate.validate()",
+                    "repro.Session(...).validate(cases)")
+    return _validate(cases, iters=iters, warmup=warmup, dram=dram, base=base)

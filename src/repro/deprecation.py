@@ -1,0 +1,28 @@
+"""One shared deprecation channel for the pre-`Session` entry points.
+
+PR 3 consolidated the five disjoint entry points (``model.estimate``,
+``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
+``autotune.autotune``, ``validate.validate``) behind the unified
+:class:`repro.Design` / :class:`repro.Session` API.  The old names keep
+working for one release through shims that call this helper; internal code
+routes through the underlying implementations directly so a
+``-W error::DeprecationWarning`` run stays clean (the CI import-surface
+check relies on that).
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit the standard one-release deprecation warning for ``old``.
+
+    ``stacklevel=3`` points the warning at the *caller* of the deprecated
+    shim (helper -> shim -> caller), so users see their own line, not ours.
+    """
+    warnings.warn(
+        f"{old} is deprecated and will be removed in the next release; "
+        f"use {new} instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )

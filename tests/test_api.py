@@ -1,0 +1,350 @@
+"""Unified Design/Session API: builders, backend equivalence, deprecation
+shims, satellite bug-fix regressions, and the validate smoke."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro import Design, Estimate, Session, Space
+from repro.core import DDR4_1866, DDR4_2666, LsuType
+from repro.core.apps import microbench
+from repro.core.fpga import BspParams, STRATIX10_BSP
+
+ALL_TYPES = [LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+             LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED]
+
+#: ~1k-point grid shared by the backend-equivalence tests (the acceptance
+#: criterion's "shared 1k-point design grid").
+GRID = dict(
+    lsu_type=ALL_TYPES,
+    n_ga=[1, 2, 4],
+    simd=[1, 4, 16],
+    n_elems=[1 << 14, 1 << 16],
+    delta=[1, 2, 7],
+    include_write=[False, True],
+    dram=[DDR4_1866, DDR4_2666],
+)   # 4*3*3*2*3*2*2 = 864 points
+
+
+class TestDesign:
+    def test_microbench_matches_apps(self):
+        d = Design.microbench(LsuType.BC_WRITE_ACK, n_ga=2, simd=4,
+                              n_elems=1 << 12)
+        ref = microbench(LsuType.BC_WRITE_ACK, n_ga=2, simd=4,
+                         n_elems=1 << 12)
+        assert list(d.lsus) == ref
+        assert d.f == 4
+        assert d.n_lsu == len(ref)
+
+    def test_microbench_normalizes_inert_stride(self):
+        """Stride is inert for write-ACK/atomic — same design either way."""
+        a = Design.microbench(LsuType.ATOMIC_PIPELINED, n_ga=1, delta=1,
+                              n_elems=1 << 12)
+        b = Design.microbench(LsuType.ATOMIC_PIPELINED, n_ga=1, delta=7,
+                              n_elems=1 << 12)
+        assert a.lsus == b.lsus
+
+    def test_with_helpers_are_pure(self):
+        d = Design.microbench(LsuType.BC_ALIGNED, n_ga=1)
+        d2 = d.with_dram(DDR4_2666).with_f(4).with_name("x")
+        assert (d.dram, d.f, d.name.startswith("microbench")) == \
+            (None, 16, True)
+        assert (d2.dram, d2.f, d2.name) == (DDR4_2666, 4, "x")
+        assert d2.lsus == d.lsus
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            d.f = 2
+
+    def test_with_access_appends(self):
+        d = Design(lsus=()).with_access(
+            LsuType.BC_ALIGNED, n_elems=1 << 10, f=4)
+        d = d.with_access(LsuType.ATOMIC_PIPELINED, n_elems=1 << 8)
+        assert [l.lsu_type for l in d.lsus] == [LsuType.BC_ALIGNED,
+                                                LsuType.ATOMIC_PIPELINED]
+        assert d.total_bytes > 0 and d.resource_bytes > 0
+
+    def test_from_app(self):
+        d = Design.from_app("vectoradd", 1 << 16)
+        assert d.name == "vectoradd" and d.n_lsu >= 2
+
+    def test_from_classes_uses_validate_mapping(self):
+        d = Design.from_classes({"stream": 1 << 20, "gather": 1 << 12},
+                                flops=123.0, name="hlo")
+        types = {l.name: l.lsu_type for l in d.lsus}
+        assert types["stream"] is LsuType.BC_ALIGNED
+        assert types["gather"] is LsuType.BC_WRITE_ACK
+        assert d.flops == 123.0
+        assert d.total_bytes == pytest.approx((1 << 20) + (1 << 12), rel=1e-3)
+
+    def test_from_kernel_reads_compiled_traffic(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+
+        d = Design.from_kernel(
+            lambda a, b: (a + b).sum(),
+            jax.ShapeDtypeStruct((1 << 14,), jnp.float32),
+            jax.ShapeDtypeStruct((1 << 14,), jnp.float32))
+        assert d.n_lsu >= 1 and d.total_bytes > 0 and d.flops > 0
+        est = Session().estimate(d)
+        assert est.t_exe > 0 and np.isfinite(est.t_exe)
+
+
+class TestSessionEstimate:
+    def test_backend_dispatch_equivalent(self):
+        d = Design.microbench(LsuType.BC_NON_ALIGNED, n_ga=3, simd=16,
+                              n_elems=1 << 16, delta=7)
+        ests = {b: Session(backend=b).estimate(d)
+                for b in ("scalar", "numpy-batch")}
+        for e in ests.values():
+            assert isinstance(e, Estimate)
+        assert ests["scalar"].t_exe == pytest.approx(
+            ests["numpy-batch"].t_exe, rel=1e-9)
+        assert ests["scalar"].memory_bound == ests["numpy-batch"].memory_bound
+        # the scalar backend carries the readable per-LSU breakdown
+        assert len(ests["scalar"].per_lsu) == d.n_lsu
+
+    def test_design_hardware_overrides_session(self):
+        d = Design.microbench(LsuType.BC_ALIGNED, n_ga=2, n_elems=1 << 16)
+        base = Session(dram=DDR4_1866).estimate(d).t_exe
+        over = Session(dram=DDR4_1866).estimate(d.with_dram(DDR4_2666)).t_exe
+        faster = Session(dram=DDR4_2666).estimate(d).t_exe
+        assert over == pytest.approx(faster, rel=1e-12)
+        assert over < base
+
+    def test_estimate_many_matches_single(self):
+        designs = [Design.microbench(t, n_ga=2, n_elems=1 << 14)
+                   for t in ALL_TYPES]
+        sess = Session()
+        many = sess.estimate_many(designs)
+        for d, e in zip(designs, many):
+            assert e.t_exe == pytest.approx(sess.estimate(d).t_exe, rel=1e-12)
+
+    def test_calibration_factor_scales_times(self):
+        d = Design.microbench(LsuType.BC_ALIGNED, n_ga=2, n_elems=1 << 14)
+        raw = Session().estimate(d)
+        cal = dataclasses.replace(Session(), calibration_factor=2.0).estimate(d)
+        assert cal.t_exe == pytest.approx(2.0 * raw.t_exe, rel=1e-12)
+        assert cal.bound_ratio == raw.bound_ratio   # classification unscaled
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="backend"):
+            Session(backend="cuda")
+
+
+class TestBackendEquivalence:
+    """Acceptance: all three backends element-wise equal (<= 1e-6) through
+    Session.sweep on the shared grid."""
+
+    def test_scalar_vs_batch(self):
+        sp = Space.grid(**GRID)
+        ref = Session(backend="numpy-batch").sweep(sp)
+        got = Session(backend="scalar").sweep(sp)
+        assert ref.n_points == got.n_points >= 800
+        np.testing.assert_allclose(got.t_exe, ref.t_exe, rtol=1e-6, atol=0.0)
+        np.testing.assert_allclose(np.asarray(got.estimate.bound_ratio),
+                                   np.asarray(ref.estimate.bound_ratio),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got.memory_bound),
+                                      np.asarray(ref.memory_bound))
+        np.testing.assert_allclose(got.resource, ref.resource, rtol=1e-12)
+
+    def test_jax_jit_vs_batch(self):
+        pytest.importorskip("jax")
+        sp = Space.grid(**GRID)
+        ref = Session(backend="numpy-batch").sweep(sp)
+        got = Session(backend="jax-jit").sweep(sp)
+        np.testing.assert_allclose(got.t_exe, ref.t_exe, rtol=1e-6, atol=0.0)
+        np.testing.assert_allclose(np.asarray(got.estimate.total_bytes),
+                                   np.asarray(ref.estimate.total_bytes),
+                                   rtol=1e-9)
+        np.testing.assert_array_equal(np.asarray(got.memory_bound),
+                                      np.asarray(ref.memory_bound))
+
+    def test_jax_jit_single_estimate(self):
+        pytest.importorskip("jax")
+        d = Design.microbench(LsuType.BC_WRITE_ACK, n_ga=2, simd=4,
+                              n_elems=1 << 14)
+        a = Session(backend="numpy-batch").estimate(d)
+        b = Session(backend="jax-jit").estimate(d)
+        assert b.t_exe == pytest.approx(a.t_exe, rel=1e-6)
+
+
+class TestSweepReport:
+    def test_report_protocol(self):
+        res = Session().sweep(Space.grid(lsu_type=ALL_TYPES, n_ga=[1, 2, 4],
+                                         n_elems=[1 << 14]))
+        assert res.kind == "sweep"
+        rows = res.rows()
+        assert len(rows) == res.n_points
+        csv_text = res.to_csv()
+        assert csv_text.splitlines()[0].startswith("lsu_type")
+        s = res.summary()
+        assert s["n_points"] == res.n_points and s["backend"] == "numpy-batch"
+        best = res.best()
+        assert best.t_exe == pytest.approx(float(np.min(res.t_exe)))
+
+    def test_random_space(self):
+        res = Session().sweep(Space.random(
+            64, seed=7, lsu_type=ALL_TYPES, n_ga=(1, 8),
+            simd=[1, 2, 4, 8, 16], n_elems=(1 << 12, 1 << 16)))
+        assert res.n_points == 64
+        assert np.all(np.asarray(res.t_exe) > 0)
+
+    def test_sweep_kwargs_shorthand(self):
+        a = Session().sweep(Space.grid(n_ga=[1, 2], n_elems=[1 << 14]))
+        b = Session().sweep(n_ga=[1, 2], n_elems=[1 << 14])
+        np.testing.assert_allclose(a.t_exe, b.t_exe, rtol=0)
+        with pytest.raises(TypeError):
+            Session().sweep(Space.grid(n_ga=[1]), n_ga=[2])
+
+
+class TestSatelliteFixes:
+    def test_random_n_elems_rounds_to_own_simd(self):
+        """Per-point rounding keeps samples in range even when the LCM of the
+        sampled simd values would leave it (the PR 1 debt)."""
+        res = Session().sweep(Space.random(
+            256, seed=3, simd=[3, 5], n_elems=(30, 60)))
+        ne = np.asarray(res.points["n_elems"], dtype=np.int64)
+        simd = np.asarray(res.points["simd"], dtype=np.int64)
+        assert np.all(ne % simd == 0)
+        # lcm(3,5)=15 rounding would forbid e.g. 33; per-point must keep all
+        # samples inside the requested range (every multiple of 3 or 5 in
+        # [30, 60] is reachable).
+        assert np.all((ne >= 30) & (ne <= 60))
+        assert len(np.unique(ne)) > len(np.unique((ne // 15) * 15))
+
+    def test_atomic_include_write_is_inert(self):
+        """include_write must not create phantom distinct atomic designs."""
+        res = Session().sweep(Space.grid(
+            lsu_type=[LsuType.ATOMIC_PIPELINED], n_ga=[1, 2],
+            n_elems=[1 << 12], include_write=[False, True]))
+        iw = np.asarray(res.points["include_write"], dtype=bool)
+        assert not iw.any()          # normalized: atomics ARE the write
+        t = np.asarray(res.t_exe).reshape(2, 2)   # [n_ga, include_write]
+        np.testing.assert_array_equal(t[:, 0], t[:, 1])
+
+    def test_pareto_front_unchanged_by_rewrite(self):
+        """The O(F) front keeps the exact brute-force semantics."""
+        from repro.core.sweep import pareto_front
+
+        rng = np.random.default_rng(11)
+        vals = rng.random((300, 2))
+        vals[rng.integers(0, 300, 30)] = vals[rng.integers(0, 300, 30)]
+        front = set(pareto_front(vals).tolist())
+        dominated = {
+            j for j in range(len(vals)) for i in range(len(vals))
+            if i != j and np.all(vals[i] <= vals[j])
+            and np.any(vals[i] < vals[j])
+        }
+        assert front == set(range(len(vals))) - dominated
+
+
+class TestDeprecationShims:
+    def test_sweep_grid_warns_and_matches(self):
+        from repro.core.sweep import sweep_grid
+
+        with pytest.warns(DeprecationWarning, match="Session"):
+            old = sweep_grid(n_ga=[1, 2], n_elems=[1 << 14])
+        new = Session().sweep(n_ga=[1, 2], n_elems=[1 << 14])
+        np.testing.assert_allclose(old.t_exe, new.t_exe, rtol=0)
+
+    def test_sweep_random_warns(self):
+        from repro.core.sweep import sweep_random
+
+        with pytest.warns(DeprecationWarning):
+            sweep_random(8, n_elems=(1 << 12, 1 << 14))
+
+    def test_model_estimate_warns_and_matches(self):
+        from repro.core.model import estimate
+
+        lsus = microbench(LsuType.BC_ALIGNED, n_ga=2, n_elems=1 << 14)
+        with pytest.warns(DeprecationWarning, match="Session"):
+            old = estimate(lsus, DDR4_1866)
+        new = Session(backend="scalar").estimate(
+            Design(lsus=tuple(lsus), f=1))
+        assert old.t_exe == pytest.approx(new.t_exe, rel=1e-12)
+
+    def test_predictor_predict_warns(self):
+        from repro.core.predictor import predict
+
+        hlo = ("HloModule m\n\n"
+               "ENTRY main () -> f32[] {\n"
+               "  ROOT c = f32[] constant(0)\n}\n")
+        with pytest.warns(DeprecationWarning, match="Session"):
+            pred = predict(hlo)
+        assert pred.flops == 0.0
+
+    def test_autotune_warns(self):
+        from repro.core import autotune as AT
+
+        with pytest.warns(DeprecationWarning, match="Session"):
+            res = AT.autotune(None, None, None, [], cache=False)
+        assert res == [] and res.failures == []
+
+    def test_validate_warns(self):
+        pytest.importorskip("jax")
+        from repro.core import validate as V
+
+        with pytest.warns(DeprecationWarning, match="Session"):
+            rep = V.validate([], iters=1)
+        assert rep.results == []
+
+    def test_import_surface_is_warning_free(self):
+        """`import repro` + the curated names never trigger the shims."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            import importlib
+
+            importlib.reload(repro)
+            assert repro.Session and repro.Design and repro.Space
+            for name in repro.__all__:
+                assert getattr(repro, name) is not None
+
+
+class TestSessionValidate:
+    def test_validate_smoke_cpu_interpret(self):
+        """Session.validate closes the measured-vs-predicted loop on the two
+        cheapest membench kernels in CPU interpret mode."""
+        jax = pytest.importorskip("jax")
+        from repro.core import validate as V
+
+        cases = [c for c in V.default_cases()
+                 if c.name in ("membench_aligned", "membench_strided")]
+        rep = Session().validate(cases, iters=1, warmup=1)
+        assert rep.kind == "validate"
+        assert len(rep.results) >= 1, rep.failures
+        for r in rep.results:
+            assert np.isfinite(r.err_pct) and r.measured_s > 0
+        assert rep.calibration_factor > 0
+        # report protocol: rows/to_csv/summary all work
+        assert len(rep.rows()) == len(rep.results)
+        assert rep.to_csv().startswith("kernel")
+        assert rep.summary()["kernels"] == len(rep.results)
+        # a session calibrated on the report predicts in measured seconds
+        sess = Session().with_calibration(rep)
+        assert sess.calibration_factor == pytest.approx(
+            rep.calibration_factor)
+
+    def test_validate_uncalibrated_predicts_from_model_alone(self):
+        """calibrate=False: no measured wall-clock enters the prediction
+        side — the session dram scores raw and the host factor stays 1."""
+        pytest.importorskip("jax")
+        from repro.core import validate as V
+
+        cases = [c for c in V.default_cases()
+                 if c.name == "membench_aligned"]
+        sess = Session()
+        rep = sess.validate(cases, iters=1, warmup=1, calibrate=False)
+        assert rep.calibration_factor == 1.0
+        assert rep.dram == sess.dram
+        if rep.results:   # prediction = the raw model on the session dram,
+            r = rep.results[0]          # independent of this run's timings
+            assert np.isfinite(r.predicted_s) and r.predicted_s > 0
+
+    def test_roofline_report(self):
+        d = Design.microbench(LsuType.BC_ALIGNED, n_ga=2, n_elems=1 << 14)
+        rl = Session().roofline(d)
+        assert rl.bottleneck == "memory" and rl.memory_bound
+        assert rl.t_exe == pytest.approx(rl.t_memory)
+        assert rl.rows()[0]["eff_bw_gbs"] > 0
