@@ -23,6 +23,23 @@ from repro.core.model import pipeline_time
 _SESSION = Session(dram=DDR4_1866, backend="scalar")
 
 
+def set_session(sess: Session) -> None:
+    """Point every table at a different evaluation context (scalar backend
+    enforced — the tables print its per-LSU breakdown).  Used by
+    ``benchmarks.run --hw <name>`` to re-run the tables against a registry
+    hardware spec."""
+    global _SESSION
+    _SESSION = sess.with_backend("scalar")
+
+
+def _simulate_session(lsus) -> "object":
+    """Simulator run against the session hardware, including the spec's
+    controller interleave when a ``repro.hw`` spec is active."""
+    interleave = (_SESSION.hardware.dram.interleave_bytes
+                  if _SESSION.hardware is not None else 1024)
+    return simulate(lsus, _SESSION.dram, interleave_bytes=interleave)
+
+
 def fig3_membound() -> list[dict]:
     """Fig. 3: execution time vs kernel frequency — memory-bound kernels are
     frequency-insensitive; compute-bound ones scale with f_kernel."""
@@ -61,7 +78,7 @@ def fig4_lsu_microbench() -> list[dict]:
                 design = Design.microbench(lsu_type, n_ga=n_ga, simd=simd,
                                            n_elems=n).with_f(1)
                 est = _SESSION.estimate(design)
-                sim = simulate(list(design.lsus), DDR4_1866)
+                sim = _simulate_session(list(design.lsus))
                 err = (abs(est.t_exe - sim.t_total) / sim.t_total * 100
                        if sim.t_total else 0.0)
                 rows.append({
@@ -99,7 +116,7 @@ def fig5_stride() -> list[dict]:
 
 def table4_applications() -> list[dict]:
     """Table IV: the nine memory-bound applications + VectorAdd delta=2."""
-    return table4_rows()
+    return table4_rows(_SESSION.dram, _SESSION.bsp)
 
 
 def table5_comparison() -> list[dict]:

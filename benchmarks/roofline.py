@@ -16,7 +16,7 @@ import glob
 import json
 import os
 
-from repro.core.hbm import TPU_V5E
+from repro import hw as hwreg
 from repro.core.roofline import RooflineCell, markdown_table
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES
@@ -25,7 +25,16 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "dryrun")
 
 
-def load_cells(pattern: str = "*", tag: str = "") -> list[RooflineCell]:
+def load_cells(pattern: str = "*", tag: str = "",
+               hw=None) -> list[RooflineCell]:
+    """Build roofline cells from dry-run artifacts.
+
+    ``hw`` is the chip parameter set (a ``TpuParams`` view); default is the
+    registry default chip.  ``benchmarks.run --hw <name>`` threads the
+    selected spec through here.
+    """
+    if hw is None:
+        hw = hwreg.get(hwreg.DEFAULT_CHIP).tpu_params()
     cells = []
     for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
                                               pattern + ".json"))):
@@ -38,7 +47,6 @@ def load_cells(pattern: str = "*", tag: str = "") -> list[RooflineCell]:
             r = json.load(f)
         if r.get("status") != "ok":
             continue
-        hw = TPU_V5E
         wire = r["collective_wire_bytes"]
         cfg = get_config(r["arch"])
         sh = SHAPES[r["shape"]]
@@ -65,6 +73,7 @@ def load_cells(pattern: str = "*", tag: str = "") -> list[RooflineCell]:
                    (r.get("memory_analysis") or {}).get("total_bytes", 0) / 1e9,
                    "tokens_per_step": r.get("tokens_per_step"),
                    "kind": r.get("kind")},
+            hw=hw,
         ))
     return cells
 

@@ -4,12 +4,16 @@ roofline harness and the design-space sweep engine.  Prints
 followed by the detailed per-table CSVs.
 
 Usage:
-    python -m benchmarks.run [--details] [--roofline-only]
-    python -m benchmarks.run --smoke --out smoke.json   # fast CI job
+    python -m benchmarks.run [--details] [--roofline-only] [--hw <name>]
+    python -m benchmarks.run --smoke --out json         # fast CI job
 
 ``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
 Fig. 5 stride, and a reduced design-space sweep) and, with ``--out``,
-writes the full results as a JSON artifact for CI upload.
+writes the full results as a JSON artifact for CI upload.  ``--out json``
+resolves to ``BENCH_smoke.json`` at the repository root — the recorded
+perf-trajectory artifact CI uploads.  ``--hw <name>`` re-runs everything
+against a ``repro.hw`` registry spec (e.g. ``stratix10_ddr4_2666``,
+``tpu_v5e``).
 """
 from __future__ import annotations
 
@@ -46,11 +50,24 @@ def main() -> None:
     mode.add_argument("--smoke", action="store_true",
                       help="fast subset: model-only tables + reduced sweep")
     ap.add_argument("--out", type=str, default=None,
-                    help="write results as JSON to this path")
+                    help="write results as JSON to this path; the literal "
+                         "value 'json' resolves to BENCH_smoke.json (or "
+                         "BENCH_full.json) at the repository root")
+    ap.add_argument("--hw", type=str, default=None, metavar="NAME",
+                    help="evaluate against a repro.hw registry spec "
+                         "(e.g. stratix10_ddr4_2666, tpu_v5e)")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as PT
     from benchmarks import sweep_bench as SB
+
+    session = None
+    if args.hw:
+        import repro.hw as hwreg
+        from repro import Session
+
+        session = Session().with_hardware(hwreg.get(args.hw))
+        PT.set_session(session)
 
     summary: list[tuple[str, float, str]] = []
     details: dict[str, list[dict]] = {}
@@ -58,10 +75,11 @@ def main() -> None:
     if args.smoke:
         tables = {k: PT.ALL[k] for k in ("table4_applications", "fig5_stride")
                   if k in PT.ALL}
-        sweep_fn = lambda: SB.sweep_speedup(SB.SMOKE_AXES)  # noqa: E731
+        sweep_fn = lambda: SB.sweep_speedup(SB.SMOKE_AXES,  # noqa: E731
+                                            session=session)
     else:
         tables = {} if args.roofline_only else dict(PT.ALL)
-        sweep_fn = SB.sweep_speedup
+        sweep_fn = lambda: SB.sweep_speedup(session=session)  # noqa: E731
 
     for name, fn in tables.items():
         rows, us = PT.timed(fn)
@@ -78,7 +96,7 @@ def main() -> None:
         try:
             from benchmarks import roofline as RL
             t0 = time.perf_counter()
-            cells = RL.load_cells()
+            cells = RL.load_cells(hw=session.hw if session else None)
             us = (time.perf_counter() - t0) / max(1, len(cells)) * 1e6
             if cells:
                 import statistics
@@ -106,11 +124,18 @@ def main() -> None:
 
     if args.out:
         payload = {
+            "hw": args.hw or "default",
             "summary": [{"name": n, "us_per_call": round(u, 1), "derived": d}
                         for n, u, d in summary],
             "details": details,
         }
-        out = pathlib.Path(args.out)
+        if args.out == "json":
+            # canonical perf-trajectory artifact at the repository root
+            root = pathlib.Path(__file__).resolve().parents[1]
+            out = root / ("BENCH_smoke.json" if args.smoke
+                          else "BENCH_full.json")
+        else:
+            out = pathlib.Path(args.out)
         out.parent.mkdir(parents=True, exist_ok=True)
         out.write_text(json.dumps(payload, indent=2, default=str))
         print(f"wrote {out}")

@@ -15,8 +15,8 @@ import time
 import numpy as np
 
 from repro import Design, Session, Space
-from repro.core import DDR4_1866, DDR4_2666, LsuType
-from repro.core.fpga import BspParams, STRATIX10_BSP
+from repro.core import DDR4_1866, DDR4_2666, LsuType, STRATIX10_BSP
+from repro.core.fpga import BspParams
 from repro.core.sweep import SweepResult
 
 #: >= 10k-point space over every GMI LSU type, LSU count, SIMD width, input
@@ -44,11 +44,11 @@ SMOKE_AXES = dict(
 )
 
 
-def scalar_loop(res: SweepResult) -> np.ndarray:
+def scalar_loop(res: SweepResult, session: Session | None = None) -> np.ndarray:
     """Score every point of ``res``'s design space with the scalar path."""
     P = res.points
     out = np.empty(res.n_points)
-    sess = Session(backend="scalar")
+    sess = (session or Session()).with_backend("scalar")
     for i in range(res.n_points):
         design = Design.microbench(
             P["lsu_type"][i],
@@ -65,16 +65,27 @@ def scalar_loop(res: SweepResult) -> np.ndarray:
     return out
 
 
-def sweep_speedup(axes: dict | None = None) -> list[dict]:
-    """One-row summary: points, batched/scalar wall time, speedup, fidelity."""
-    space = Space.grid(**dict(axes or FULL_AXES))
-    sess = Session()
+def sweep_speedup(axes: dict | None = None, *,
+                  session: Session | None = None) -> list[dict]:
+    """One-row summary: points, batched/scalar wall time, speedup, fidelity.
+
+    ``session`` selects the hardware context (e.g. built from a ``--hw``
+    registry name); the default board otherwise.  A session carrying a
+    hardware spec pins the memory system, so the explicit dram/bsp axes are
+    dropped in its favor.
+    """
+    sess = (session or Session()).with_backend("numpy-batch")
+    axes = dict(axes or FULL_AXES)
+    if sess.hardware is not None:
+        axes.pop("dram", None)
+        axes.pop("bsp", None)
+    space = Space.grid(**axes)
     t0 = time.perf_counter()
     res = sess.sweep(space)
     t_batch = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    scalar = scalar_loop(res)
+    scalar = scalar_loop(res, session)
     t_scalar = time.perf_counter() - t0
 
     agree = bool(np.allclose(scalar, res.t_exe, rtol=1e-6, atol=0.0))

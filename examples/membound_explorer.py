@@ -15,7 +15,8 @@ Pallas kernels and scores the analytical model against the measurement
 
 Run:  python examples/membound_explorer.py   (pip install -e . or
 PYTHONPATH=src; pass --sweep-only to skip the jax compilation part,
---validate for just the measured-vs-predicted table)
+--validate for just the measured-vs-predicted table, --hw <name> to
+evaluate against a ``repro.hw`` registry spec, e.g. --hw tpu_v4)
 
 Everything routes through the unified ``repro.Design``/``repro.Session``
 API — this file doubles as its end-to-end example.
@@ -26,21 +27,45 @@ import time
 from repro import Session, Space
 
 
+def _session() -> Session:
+    """The evaluation context, honoring a ``--hw <name>``/``--hw=<name>``
+    registry flag."""
+    argv = sys.argv[1:]
+    name = None
+    for i, arg in enumerate(argv):
+        if arg == "--hw":
+            if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+                sys.exit("usage: --hw <name>  (see repro.hw.names())")
+            name = argv[i + 1]
+        elif arg.startswith("--hw="):
+            name = arg.split("=", 1)[1]
+    if name is None:
+        return Session()
+    import repro.hw as hwreg
+
+    try:
+        return Session().with_hardware(hwreg.get(name))
+    except KeyError as e:
+        sys.exit(f"--hw: {e.args[0]}")
+
+
 def sweep_demo() -> None:
     """Score a full design space in one pass and show the interesting slices."""
     from repro.core import DDR4_1866, DDR4_2666, LsuType
 
-    sess = Session()
-    t0 = time.perf_counter()
-    res = sess.sweep(Space.grid(
+    sess = _session()
+    axes = dict(
         lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
                   LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED],
         n_ga=[1, 2, 3, 4],
         simd=[1, 2, 4, 8, 16],
         n_elems=[1 << 16],
         delta=[1, 2, 4, 7],
-        dram=[DDR4_1866, DDR4_2666],
-    ))
+    )
+    if sess.hardware is None:     # --hw pins the memory system instead
+        axes["dram"] = [DDR4_1866, DDR4_2666]
+    t0 = time.perf_counter()
+    res = sess.sweep(Space.grid(**axes))
     dt = time.perf_counter() - t0
     print(f"\nDesign-space sweep: {res.n_points} points scored in "
           f"{dt * 1e3:.1f} ms ({res.n_points / dt:,.0f} points/s)")
@@ -69,7 +94,7 @@ def sweep_demo() -> None:
 def validate_demo() -> None:
     """Close the loop: measure the Pallas kernels and score the analytical
     model against the measurements (paper-style error table)."""
-    rep = Session().validate()
+    rep = _session().validate()
     print(f"\nMeasured-vs-predicted validation "
           f"(backend={rep.results[0].backend if rep.results else '?'}, "
           f"stream anchor {rep.measured_bw / 1e9:.1f} GB/s, "
@@ -90,8 +115,8 @@ def explain(name: str, fn, *specs) -> None:
     from repro.core import hlo as HLO
 
     compiled = jax.jit(fn).lower(*specs).compile()
-    pred = Session().predict(compiled.as_text(),
-                             HLO.cost_analysis_stats(compiled))
+    pred = _session().predict(compiled.as_text(),
+                              HLO.cost_analysis_stats(compiled))
     classes = {c.name: c.nbytes for c in pred.memory_components}
     print(f"{name:28s} AI={pred.arithmetic_intensity:8.2f} FLOP/B  "
           f"bound={pred.bottleneck:9s} classes="

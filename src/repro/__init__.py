@@ -12,6 +12,14 @@ sweep, autotune, validate, roofline, predict — speaks the same
     >>> sess.estimate(d).t_exe
     >>> sess.sweep(repro.Space.grid(n_ga=[1, 2, 4], simd=[1, 16])).top_k(3)
 
+Hardware is data, not constants: :mod:`repro.hw` holds one serializable
+:class:`Hardware` spec family behind a named registry —
+``sess.with_hardware(repro.hw.get("tpu_v4"))`` swaps the whole memory
+system, and a sweep can fan out over a ``hardware`` axis.  The convenience
+constants re-exported below (``DDR4_1866`` …) are built from those registry
+entries; their former homes (``repro.core.fpga.DDR4_1866``,
+``repro.core.hbm.TPU_V5E``) are one-release ``DeprecationWarning`` aliases.
+
 Everything else (``repro.core.*``, ``repro.kernels.*``, ``repro.launch.*``)
 is implementation; the pre-PR-3 entry points (``model.estimate``,
 ``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
@@ -21,6 +29,7 @@ release as :class:`DeprecationWarning` shims over this API.
 This module imports NumPy only; jax loads lazily, on first use of the
 ``jax-jit`` backend, ``Design.from_kernel`` or ``Session.validate``.
 """
+from repro import hw
 from repro.api import (
     BACKENDS,
     AutotuneReport,
@@ -33,24 +42,31 @@ from repro.api import (
     SweepReport,
     ValidateReport,
 )
-from repro.core.fpga import (
+# Registry-backed convenience constants (the legacy parameter views of the
+# repro.hw presets, built once in repro.core; reading them here does not
+# warn).
+from repro.core import (
     DDR4_1866,
     DDR4_2666,
     DRAM_CONFIGS,
-    BspParams,
-    DramParams,
     STRATIX10_BSP,
 )
-from repro.core.hbm import AccessClass, TPU_V5E, TpuParams
+from repro.core.fpga import BspParams, DramParams
+from repro.core.hbm import AccessClass, TpuParams
 from repro.core.lsu import Lsu, LsuType, make_global_access
+from repro.hw import ClockDomain, DramOrganization, Hardware, MemorySystem
 
-__version__ = "0.3.0"
+TPU_V5E = hw.get("tpu_v5e").tpu_params()
+
+__version__ = "0.4.0"
 
 __all__ = [
     # the unified API
     "Design", "Session", "Space", "Estimate", "Report",
     "SweepReport", "AutotuneReport", "ValidateReport", "RooflineReport",
     "BACKENDS",
+    # the hardware-spec layer
+    "hw", "Hardware", "MemorySystem", "DramOrganization", "ClockDomain",
     # design vocabulary (paper Tables I-III)
     "Lsu", "LsuType", "make_global_access",
     "DramParams", "BspParams", "DDR4_1866", "DDR4_2666", "DRAM_CONFIGS",

@@ -50,9 +50,11 @@ from repro.core import apps as _apps
 from repro.core import model as _model
 from repro.core import model_batch as _mb
 from repro.core import sweep as _sweep
-from repro.core.fpga import BspParams, DramParams, DDR4_1866, STRATIX10_BSP
-from repro.core.hbm import TpuParams, TPU_V5E
+from repro.core.fpga import BspParams, DramParams
+from repro.core.hbm import TpuParams
 from repro.core.lsu import Lsu, LsuType, make_global_access
+from repro.hw import DEFAULT_BOARD, DEFAULT_CHIP, Hardware
+from repro.hw import get as _hw_get
 
 #: Supported Session compute backends, in increasing batch-friendliness.
 BACKENDS = ("scalar", "numpy-batch", "jax-jit")
@@ -496,10 +498,14 @@ class RooflineReport(Report):
 class Session:
     """Evaluation context every pipeline stage runs in.
 
+    * ``hardware`` — an optional :class:`repro.hw.Hardware` spec (usually
+      ``repro.hw.get(name)``); when set, the three legacy views below and
+      the calibration factor all derive from it (``with_hardware``);
     * ``dram``/``bsp`` — the faithful FPGA-model hardware (paper Table III),
-      used unless a :class:`Design` carries its own override;
+      used unless a :class:`Design` carries its own override; default: the
+      registry's ``stratix10_ddr4_1866`` board;
     * ``hw`` — the TPU-transplant parameters (autotune/predict/roofline
-      compute term);
+      compute term); default: the registry's ``tpu_v5e`` chip;
     * ``backend`` — how estimates are computed: ``scalar`` (readable
       reference loop), ``numpy-batch`` (vectorized array core, default) or
       ``jax-jit`` (the same core under ``jax.jit``, x64);
@@ -509,13 +515,27 @@ class Session:
       host-measured seconds.
     """
 
-    dram: DramParams = DDR4_1866
-    bsp: BspParams = STRATIX10_BSP
-    hw: TpuParams = TPU_V5E
+    dram: DramParams | None = None
+    bsp: BspParams | None = None
+    hw: TpuParams | None = None
     backend: str = "numpy-batch"
-    calibration_factor: float = 1.0
+    calibration_factor: float | None = None
+    hardware: Hardware | None = None
 
     def __post_init__(self):
+        spec = self.hardware
+        if self.dram is None:
+            object.__setattr__(self, "dram", spec.dram_params() if spec
+                               else _hw_get(DEFAULT_BOARD).dram_params())
+        if self.bsp is None:
+            object.__setattr__(self, "bsp", spec.bsp_params() if spec
+                               else _hw_get(DEFAULT_BOARD).bsp_params())
+        if self.hw is None:
+            object.__setattr__(self, "hw", spec.tpu_params() if spec
+                               else _hw_get(DEFAULT_CHIP).tpu_params())
+        if self.calibration_factor is None:
+            object.__setattr__(self, "calibration_factor",
+                               float(spec.host_factor) if spec else 1.0)
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; pick one of {BACKENDS}")
@@ -529,13 +549,32 @@ class Session:
         return dataclasses.replace(self, backend=backend)
 
     def with_dram(self, dram: DramParams) -> "Session":
-        return dataclasses.replace(self, dram=dram)
+        # diverging from the spec: the hardware field no longer describes
+        # this session, so drop it (autotune cache keys, simulator
+        # interleave and future derivations must not read a stale spec).
+        return dataclasses.replace(self, dram=dram, hardware=None)
+
+    def with_hardware(self, hardware: Hardware) -> "Session":
+        """Session re-anchored on one :class:`repro.hw.Hardware` spec.
+
+        Every view the pipeline consumes — the FPGA-model ``dram``/``bsp``,
+        the TPU-transplant ``hw``, and the calibration factor — derives from
+        the spec, so all three backends score designs against the same
+        serializable description: ``Session().with_hardware(hw.get("tpu_v4"))``.
+        """
+        return dataclasses.replace(
+            self, hardware=hardware,
+            dram=hardware.dram_params(), bsp=hardware.bsp_params(),
+            hw=hardware.tpu_params(),
+            calibration_factor=float(hardware.host_factor))
 
     def with_calibration(self, report: "ValidateReport") -> "Session":
         """Session re-anchored on a validation report's fitted bandwidth and
-        host factor — subsequent estimates predict measured seconds."""
+        host factor — subsequent estimates predict measured seconds.  Use
+        ``with_hardware(Hardware.from_calibration(report))`` to make the
+        same re-anchoring persistent (``to_json``)."""
         return dataclasses.replace(
-            self, dram=report.dram,
+            self, dram=report.dram, hardware=None,
             calibration_factor=float(report.calibration_factor))
 
     def _hw_for(self, design: Design) -> tuple[DramParams, BspParams]:
@@ -598,7 +637,13 @@ class Session:
                                    estimator=self._estimator())
         est = result.estimate
         if self.calibration_factor != 1.0:
-            c = self.calibration_factor
+            # The session factor belongs to the *session's* hardware; points
+            # fully overridden by a hardware-axis spec already carry that
+            # spec's own persisted host_factor and must not be scaled twice.
+            hw_col = result.points.get("hardware")
+            own = (np.ones(result.n_points, dtype=bool) if hw_col is None
+                   else np.asarray([h is None for h in hw_col]))
+            c = np.where(own, self.calibration_factor, 1.0)
             est = dataclasses.replace(
                 est, t_exe=np.asarray(est.t_exe) * c,
                 t_ideal=np.asarray(est.t_ideal) * c,
@@ -611,9 +656,11 @@ class Session:
         """Reference scalar loop over the same points `_build` would score.
 
         Each point expands through ``apps.microbench`` (the proven-equal
-        scalar path); inert axes are normalized exactly like ``_build`` so
-        the reported configurations match across backends.
+        scalar path); the hardware axis and inert axes are resolved exactly
+        like ``_build`` so the reported configurations match across
+        backends.
         """
+        points, hw_scale = _sweep._apply_hardware_axis(points, n)
         lsu_types = [points["lsu_type"][i] for i in range(n)]
         is_atomic = np.array([t is LsuType.ATOMIC_PIPELINED
                               for t in lsu_types])
@@ -641,9 +688,9 @@ class Session:
                 dram=points["dram"][i], bsp=points["bsp"][i])
             ke = _model._estimate(list(design.lsus), design.dram, design.bsp,
                                   f=design.f)
-            cols["t_exe"][i] = ke.t_exe
-            cols["t_ideal"][i] = ke.t_ideal
-            cols["t_ovh"][i] = ke.t_ovh
+            cols["t_exe"][i] = ke.t_exe * hw_scale[i]
+            cols["t_ideal"][i] = ke.t_ideal * hw_scale[i]
+            cols["t_ovh"][i] = ke.t_ovh * hw_scale[i]
             cols["bound_ratio"][i] = ke.bound_ratio
             cols["total_bytes"][i] = ke.total_bytes
             memory_bound[i] = ke.memory_bound
@@ -669,12 +716,17 @@ class Session:
     def autotune(self, cfg, shape, mesh, candidates=None, *,
                  cache=True, gather_row_bytes: float = 512.0,
                  ) -> AutotuneReport:
-        """Model-guided candidate ranking (lower+compile on CPU, no TPU)."""
+        """Model-guided candidate ranking (lower+compile on CPU, no TPU).
+
+        The session's hardware spec is part of every on-disk cache key, so
+        rankings produced under one memory system are never silently reused
+        under another.
+        """
         from repro.core import autotune as _at
 
         return AutotuneReport(_at._autotune(
-            cfg, shape, mesh, candidates, self.hw, cache=cache,
-            gather_row_bytes=gather_row_bytes))
+            cfg, shape, mesh, candidates, self.hardware or self.hw,
+            cache=cache, gather_row_bytes=gather_row_bytes))
 
     def validate(self, cases=None, *, iters: int = 3, warmup: int = 1,
                  calibrate: bool = True) -> ValidateReport:

@@ -5,8 +5,11 @@ The *public* surface is :mod:`repro.api` (``Design`` / ``Session`` /
 implement it.  The pre-PR-3 entry points re-exported here (``estimate``,
 ``sweep_grid``, ``sweep_random``) are deprecated shims kept for one release.
 
+Hardware values live in the registry-backed spec layer (:mod:`repro.hw`);
+the constants re-exported below are its legacy parameter views.
+
 Faithful FPGA/HLS layer (paper Eqs. 1-10):
-    fpga        -- DRAM/BSP parameter sets (Table III)
+    fpga        -- DRAM/BSP parameter *classes* (Table III values: repro.hw)
     lsu         -- LSU taxonomy (Table I) and descriptors (Table II)
     model       -- T_exe estimation + memory-bound criterion (scalar core)
     model_batch -- array-based core of the same equations (vectorized)
@@ -25,8 +28,17 @@ TPU/XLA adaptation layer (DESIGN.md S2):
     autotune  -- model-guided configuration search (Session.autotune)
 """
 
-from repro.core.fpga import DDR4_1866, DDR4_2666, BspParams, DramParams, STRATIX10_BSP
+from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import Lsu, LsuType, make_global_access
 from repro.core.model import KernelEstimate, estimate, memory_bound_ratio
 from repro.core.model_batch import BatchEstimate, GroupBatch, estimate_batch
 from repro.core.sweep import SweepResult, pareto_front, sweep_grid, sweep_random
+from repro.hw import get as _hw_get
+
+# Registry-backed convenience re-exports of the former module constants
+# (canonical values now live in repro.hw.presets; reading them here does not
+# warn — the deprecated homes are repro.core.fpga / repro.core.hbm).
+DDR4_1866 = _hw_get("stratix10_ddr4_1866").dram_params()
+DDR4_2666 = _hw_get("stratix10_ddr4_2666").dram_params()
+DRAM_CONFIGS = {d.name: d for d in (DDR4_1866, DDR4_2666)}
+STRATIX10_BSP = _hw_get("stratix10_ddr4_1866").bsp_params()

@@ -20,9 +20,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.fpga import BspParams, DramParams, DDR4_1866, STRATIX10_BSP
+from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import Lsu, LsuType
 from repro.core import model as _model
+
+
+def _defaults(dram: DramParams | None, bsp: BspParams | None,
+              ) -> tuple[DramParams, BspParams]:
+    """Registry default board (was the DDR4_1866/STRATIX10_BSP constants)."""
+    from repro.hw import DEFAULT_BOARD, get as _get
+
+    board = _get(DEFAULT_BOARD)
+    return (dram if dram is not None else board.dram_params(),
+            bsp if bsp is not None else board.bsp_params())
 
 
 # ---------------------------------------------------------------------------
@@ -135,13 +145,14 @@ class AppDescriptor:
                            name=f"{self.name}.w{k}"))
         return out
 
-    def calibrated_elems(self, dram: DramParams = DDR4_1866,
-                         bsp: BspParams = STRATIX10_BSP) -> int:
+    def calibrated_elems(self, dram: DramParams | None = None,
+                         bsp: BspParams | None = None) -> int:
         """Input size such that the model reproduces the paper's E.Time.
 
         Calibrated against ``calibrate_to``'s row when set (the held-out
         VectorAdd delta=2 case), else against this app's own E.Time.
         """
+        dram, bsp = _defaults(dram, bsp)
         ref = APPS[self.calibrate_to] if self.calibrate_to else self
         probe = 1 << 20
         t_probe = _model._estimate(ref.lsus(probe), dram, bsp).t_exe
@@ -180,9 +191,10 @@ APPS: dict[str, AppDescriptor] = {
 }
 
 
-def table4_rows(dram: DramParams = DDR4_1866,
-                bsp: BspParams = STRATIX10_BSP) -> list[dict]:
+def table4_rows(dram: DramParams | None = None,
+                bsp: BspParams | None = None) -> list[dict]:
     """Reproduce Table IV: per-app estimate vs the paper's measured time."""
+    dram, bsp = _defaults(dram, bsp)
     rows = []
     for app in APPS.values():
         n = app.calibrated_elems(dram, bsp)

@@ -24,8 +24,23 @@ import numpy as np
 
 from repro.core import predictor as _pred
 from repro.core.cache import HloAnalysisCache, config_hash
-from repro.core.hbm import AccessClass, TpuParams, Traffic, TPU_V5E
+from repro.core.hbm import AccessClass, TpuParams, Traffic, _as_tpu_params
 from repro.core import hbm as _hbm
+
+
+def _hw_fingerprint(hw) -> dict:
+    """JSON-able description of the active hardware spec for cache keying.
+
+    A calibrated or swapped memory system must never silently reuse cached
+    rankings produced under different hardware, so the spec (a
+    ``repro.hw.Hardware``, a legacy ``TpuParams``, or ``None`` for the
+    registry default) is folded into every cache key.  The fingerprint is
+    canonicalized to the :class:`TpuParams` view (what ``rank_records``
+    actually consumes) plus the persisted calibration, so the same
+    effective hardware keys identically across every entry point.
+    """
+    return {"tpu": dataclasses.asdict(_as_tpu_params(hw)),
+            "host_factor": float(getattr(hw, "host_factor", 1.0))}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,13 +151,15 @@ def _code_fingerprint() -> str:
     return _CODE_FPR
 
 
-def candidate_key(cfg, shape, mesh, candidate: Candidate) -> str:
-    """Config hash identifying one (model, shape, mesh, candidate) compile.
+def candidate_key(cfg, shape, mesh, candidate: Candidate, hw=None) -> str:
+    """Config hash identifying one (model, shape, mesh, candidate, hw) record.
 
     Salted with the jax version (different compiler, different HLO), the
     analyzer version (different analysis semantics), and a content hash of
     the step-building source (different program for the same config), so
-    cached records are invalidated when any of them changes.
+    cached records are invalidated when any of them changes.  The active
+    hardware spec is part of the key: a calibrated or swapped memory system
+    must not reuse records ranked under different hardware.
     """
     import jax
 
@@ -156,22 +173,25 @@ def candidate_key(cfg, shape, mesh, candidate: Candidate) -> str:
                                       "size", None)},
         "candidate": {"overrides": candidate.overrides,
                       "train_overrides": candidate.train_overrides},
+        "hw": _hw_fingerprint(hw),
     }, salt=f"jax-{jax.__version__}-analyzer-{ANALYZER_VERSION}"
             f"-src-{_code_fingerprint()}")
 
 
 def analyze_candidate(cfg, shape, mesh, candidate: Candidate,
-                      cache: HloAnalysisCache | None = None) -> dict:
+                      cache: HloAnalysisCache | None = None,
+                      hw=None) -> dict:
     """Compiled-HLO analysis record for one candidate (cache-aware).
 
     Returns a JSON-able dict with the trip-count-aware static counts — all
-    the model needs; the HLO text itself is never stored.
+    the model needs; the HLO text itself is never stored.  ``hw`` enters the
+    cache key only (the counts are hardware-independent, the key is not).
     """
     from repro.core import hlo as HLO
     from repro.core import hlo_counter as _hc
     from repro.launch.steps import TrainConfig, build_step
 
-    key = candidate_key(cfg, shape, mesh, candidate)
+    key = candidate_key(cfg, shape, mesh, candidate, hw)
     if cache is not None:
         rec = cache.get(key)
         if rec is not None:
@@ -202,14 +222,17 @@ def analyze_candidate(cfg, shape, mesh, candidate: Candidate,
     return rec
 
 
-def rank_records(records: list[Mapping], hw: TpuParams = TPU_V5E, *,
+def rank_records(records: list[Mapping], hw: TpuParams | None = None, *,
                  gather_row_bytes: float = 512.0) -> dict[str, np.ndarray]:
     """Score N analysis records in one vectorized pass.
 
-    Returns per-candidate arrays: ``t_compute``, ``t_memory``,
-    ``t_collective``, ``t_step`` (overlapped roofline max) and ``order``
-    (argsort of ``t_step``, ascending — the ranking).
+    ``hw`` may be a :class:`TpuParams`, a ``repro.hw.Hardware`` spec, or
+    ``None`` (the registry's ``tpu_v5e`` preset).  Returns per-candidate
+    arrays: ``t_compute``, ``t_memory``, ``t_collective``, ``t_step``
+    (overlapped roofline max) and ``order`` (argsort of ``t_step``,
+    ascending — the ranking).
     """
+    hw = _as_tpu_params(hw)
     n = len(records)
     class_names = sorted({k for r in records for k in r["bytes_by_class"]})
     by_class = {}
@@ -271,10 +294,10 @@ def _prediction_from(rec: Mapping, scores: dict, i: int,
 
 
 def run_trial(cfg, shape, mesh, candidate: Candidate,
-              hw: TpuParams = TPU_V5E,
+              hw: TpuParams | None = None,
               cache: HloAnalysisCache | None = None) -> TrialResult:
     """Lower+compile one candidate and predict its step time (no execution)."""
-    rec = analyze_candidate(cfg, shape, mesh, candidate, cache)
+    rec = analyze_candidate(cfg, shape, mesh, candidate, cache, hw)
     scores = rank_records([rec], hw)
     return TrialResult(candidate=candidate,
                        prediction=_prediction_from(rec, scores, 0, 512.0),
@@ -284,7 +307,7 @@ def run_trial(cfg, shape, mesh, candidate: Candidate,
 
 
 def _autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
-              hw: TpuParams = TPU_V5E, *,
+              hw: TpuParams | None = None, *,
               cache: HloAnalysisCache | bool | None = True,
               gather_row_bytes: float = 512.0) -> AutotuneResults:
     """Rank candidates by predicted step time (ascending).
@@ -310,7 +333,7 @@ def _autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
     last_exc: Exception | None = None
     for c in cands:
         try:
-            records.append(analyze_candidate(cfg, shape, mesh, c, cache))
+            records.append(analyze_candidate(cfg, shape, mesh, c, cache, hw))
             kept.append(c)
         except Exception as e:  # noqa: BLE001 — a failed candidate is data
             failures.append(TrialFailure(c, type(e).__name__, str(e)))
@@ -340,7 +363,7 @@ def _autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
 
 
 def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
-             hw: TpuParams = TPU_V5E, *,
+             hw: TpuParams | None = None, *,
              cache: HloAnalysisCache | bool | None = True,
              gather_row_bytes: float = 512.0) -> AutotuneResults:
     """Deprecated: use ``repro.Session(hw=...).autotune(cfg, shape, mesh)``."""

@@ -29,8 +29,9 @@ from __future__ import annotations
 
 from typing import Sequence
 
-from repro.core.fpga import DramParams, DDR4_1866
+from repro.core.fpga import DramParams
 from repro.core.lsu import Lsu, LsuType
+from repro.hw import DEFAULT_BOARD, get as _hw_get
 
 # Wang [6] calibration constants (Stratix V devkit, DDR3-1600: 12.8 GB/s
 # theoretical; ~85 % achievable in their microbenchmarks).
@@ -40,7 +41,8 @@ _WANG_BW = 12.8e9 * 0.85
 _WANG_RANDOM_LATENCY = 150e-9
 
 # HLScope+ characterization (performed at DDR4-1866 nominal).
-_HLSCOPE_BW = DDR4_1866.bw_mem * 0.92     # characterized stream bandwidth
+_HLSCOPE_BW = (_hw_get(DEFAULT_BOARD).dram_params().bw_mem
+               * 0.92)                    # characterized stream bandwidth
 _HLSCOPE_TCO_MANY_LSU = 2.5e-9            # SV-C: Tco=2.5ns for #lsu>3
 _HLSCOPE_BURST_BYTES = 512                # their fixed burst granularity
 _HLSCOPE_RANDOM_EFF = 0.5                 # efficiency knob for irregular LSUs

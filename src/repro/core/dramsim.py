@@ -21,9 +21,10 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.fpga import BspParams, DramParams, STRATIX10_BSP
+from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import Lsu, LsuType
 from repro.core import model as _model
+from repro.core.model import _default_bsp
 
 
 @dataclasses.dataclass
@@ -100,10 +101,10 @@ class SimResult:
 class DramSimulator:
     """Round-robin arbiter + banked DRAM with a shared data bus."""
 
-    def __init__(self, dram: DramParams, bsp: BspParams = STRATIX10_BSP,
+    def __init__(self, dram: DramParams, bsp: BspParams | None = None,
                  interleave_bytes: int = 1024, seed: int = 0):
         self.dram = dram
-        self.bsp = bsp
+        self.bsp = bsp if bsp is not None else _default_bsp()
         self.interleave = interleave_bytes
         self.seed = seed
 
@@ -179,5 +180,10 @@ class DramSimulator:
 
 
 def simulate(lsus: Sequence[Lsu], dram: DramParams,
-             bsp: BspParams = STRATIX10_BSP, seed: int = 0) -> SimResult:
-    return DramSimulator(dram, bsp, seed=seed).run(lsus)
+             bsp: BspParams | None = None, seed: int = 0,
+             interleave_bytes: int = 1024) -> SimResult:
+    """One-shot simulation; ``interleave_bytes`` is the controller
+    interleave granularity (``repro.hw`` specs carry it as
+    ``Hardware.dram.interleave_bytes``)."""
+    return DramSimulator(dram, bsp, interleave_bytes=interleave_bytes,
+                         seed=seed).run(lsus)

@@ -47,32 +47,6 @@ class DramParams:
         return self.dq * self.bl
 
 
-# Paper Table III: DDR4-1866 on the Stratix 10 GX devkit.  f_mem = 933.3 MHz.
-DDR4_1866 = DramParams(
-    name="DDR4-1866",
-    f_mem=933.3e6,
-    dq=8,
-    bl=8,
-    t_rcd=13.5e-9,
-    t_rp=13.5e-9,
-    t_wr=15e-9,
-)
-
-# Second BSP used in the Table V comparison: DDR4-2666 (f_mem = 1333 MHz).
-# JEDEC DDR4-2666 speed-bin timings (19-19-19): tRCD = tRP = 14.25 ns.
-DDR4_2666 = DramParams(
-    name="DDR4-2666",
-    f_mem=1333.0e6,
-    dq=8,
-    bl=8,
-    t_rcd=14.25e-9,
-    t_rp=14.25e-9,
-    t_wr=15e-9,
-)
-
-DRAM_CONFIGS = {d.name: d for d in (DDR4_1866, DDR4_2666)}
-
-
 @dataclasses.dataclass(frozen=True)
 class BspParams:
     """BSP / generated-IP parameters (paper Table II `Verilog` rows)."""
@@ -85,4 +59,34 @@ class BspParams:
         return (1 << self.burst_cnt) * dram.min_burst_bytes
 
 
-STRATIX10_BSP = BspParams()
+# The module constants (DDR4_1866, DDR4_2666, DRAM_CONFIGS, STRATIX10_BSP)
+# moved to the registry-backed spec layer (repro.hw.presets); the names below
+# remain importable for one release as DeprecationWarning aliases built from
+# the registry entries.
+_DEPRECATED = {
+    "DDR4_1866": ("stratix10_ddr4_1866", "dram_params"),
+    "DDR4_2666": ("stratix10_ddr4_2666", "dram_params"),
+    "STRATIX10_BSP": ("stratix10_ddr4_1866", "bsp_params"),
+}
+
+
+def __getattr__(name: str):
+    from repro.deprecation import warn_deprecated
+
+    if name in _DEPRECATED:
+        from repro.hw import get as _get
+
+        preset, view = _DEPRECATED[name]
+        warn_deprecated(f"repro.core.fpga.{name}",
+                        f'repro.hw.get("{preset}").{view}()')
+        return getattr(_get(preset), view)()
+    if name == "DRAM_CONFIGS":
+        from repro.hw import get as _get
+
+        warn_deprecated("repro.core.fpga.DRAM_CONFIGS",
+                        'repro.hw.get("stratix10_ddr4_1866") / '
+                        '"stratix10_ddr4_2666"')
+        drams = [_get(p).dram_params()
+                 for p in ("stratix10_ddr4_1866", "stratix10_ddr4_2666")]
+        return {d.name: d for d in drams}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -60,7 +60,35 @@ class TpuParams:
         return self.peak_flops / self.hbm_bw
 
 
-TPU_V5E = TpuParams()
+def _as_tpu_params(hw) -> TpuParams:
+    """Normalize ``hw`` to a :class:`TpuParams` view.
+
+    Accepts ``None`` (the registry's ``tpu_v5e`` preset), a ``TpuParams``,
+    or anything with a ``tpu_params()`` view (a ``repro.hw.Hardware`` spec)
+    — the hook that threads the unified spec through every model path.
+    """
+    if hw is None:
+        from repro.hw import DEFAULT_CHIP, get as _get
+
+        return _get(DEFAULT_CHIP).tpu_params()
+    view = getattr(hw, "tpu_params", None)
+    if callable(view):
+        return view()
+    return hw
+
+
+# TPU_V5E moved to the registry-backed spec layer (repro.hw.presets,
+# "tpu_v5e"); the name remains importable for one release as a
+# DeprecationWarning alias built from the registry entry.
+def __getattr__(name: str):
+    if name == "TPU_V5E":
+        from repro.deprecation import warn_deprecated
+        from repro.hw import get as _get
+
+        warn_deprecated("repro.core.hbm.TPU_V5E",
+                        'repro.hw.get("tpu_v5e").tpu_params()')
+        return _get("tpu_v5e").tpu_params()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,14 +107,18 @@ class Traffic:
     name: str = ""
 
 
-def traffic_time(t: Traffic, hw: TpuParams = TPU_V5E) -> tuple[float, float]:
+def traffic_time(t: Traffic, hw=None) -> tuple[float, float]:
     """(T_ideal, T_ovh) for one traffic component — Eqs. 2 and 4 transplanted.
+
+    ``hw`` may be a :class:`TpuParams`, a ``repro.hw.Hardware`` spec, or
+    ``None`` (the registry's ``tpu_v5e`` preset).
 
     * T_ideal = useful bytes / peak HBM bandwidth (identical for all classes,
       exactly like Eq. 2).
     * T_ovh   = wasted-transaction transfer time + per-transaction row
       latency amortized over the class's memory-level parallelism.
     """
+    hw = _as_tpu_params(hw)
     t_ideal = t.nbytes / hw.hbm_bw
     if t.access_class is AccessClass.VMEM or t.nbytes <= 0:
         return t_ideal, 0.0
@@ -121,12 +153,13 @@ def traffic_time(t: Traffic, hw: TpuParams = TPU_V5E) -> tuple[float, float]:
     return t_ideal, t_ovh
 
 
-def memory_time(components: list[Traffic], hw: TpuParams = TPU_V5E) -> float:
+def memory_time(components: list[Traffic], hw=None) -> float:
     """Eq. 1 transplanted: sum of per-class (T_ideal + T_ovh)."""
+    hw = _as_tpu_params(hw)
     return sum(sum(traffic_time(c, hw)) for c in components)
 
 
-def memory_time_batch(bytes_by_class, hw: TpuParams = TPU_V5E, *,
+def memory_time_batch(bytes_by_class, hw=None, *,
                       row_bytes: float = 512.0):
     """Vectorized ``memory_time`` over a batch of compiled steps.
 
@@ -138,6 +171,7 @@ def memory_time_batch(bytes_by_class, hw: TpuParams = TPU_V5E, *,
     """
     import numpy as np
 
+    hw = _as_tpu_params(hw)
     total = None
     for cls, nbytes in bytes_by_class.items():
         if isinstance(cls, str):

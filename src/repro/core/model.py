@@ -50,8 +50,15 @@ import dataclasses
 import math
 from typing import Sequence
 
-from repro.core.fpga import BspParams, DramParams, STRATIX10_BSP
+from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import Lsu, LsuType
+
+
+def _default_bsp() -> BspParams:
+    """The registry default board's BSP view (was the STRATIX10_BSP const)."""
+    from repro.hw import DEFAULT_BOARD, get as _get
+
+    return _get(DEFAULT_BOARD).bsp_params()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,7 +187,7 @@ def memory_bound_ratio(lsus: Sequence[Lsu], dram: DramParams) -> float:
 def _estimate(
     lsus: Sequence[Lsu],
     dram: DramParams,
-    bsp: BspParams = STRATIX10_BSP,
+    bsp: BspParams | None = None,
     *,
     f: int = 1,
 ) -> KernelEstimate:
@@ -194,6 +201,7 @@ def _estimate(
     """
     from repro.core import model_batch as _mb
 
+    bsp = bsp if bsp is not None else _default_bsp()
     glob = [l for l in lsus if l.lsu_type.is_global]
     if not glob:
         return KernelEstimate(t_exe=0.0, memory_bound=False, bound_ratio=0.0,
@@ -231,7 +239,7 @@ def _estimate(
 def estimate(
     lsus: Sequence[Lsu],
     dram: DramParams,
-    bsp: BspParams = STRATIX10_BSP,
+    bsp: BspParams | None = None,
     *,
     f: int = 1,
 ) -> KernelEstimate:

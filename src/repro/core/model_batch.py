@@ -26,7 +26,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.core.fpga import BspParams, DramParams, STRATIX10_BSP
+from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import Lsu, LsuType
 
 # Integer codes for the GMI LSU types (the only ones that touch DRAM).
@@ -192,7 +192,7 @@ class GroupBatch:
         cls,
         kernels: Sequence[Sequence[Lsu]],
         dram: DramParams | Sequence[DramParams],
-        bsp: BspParams | Sequence[BspParams] = STRATIX10_BSP,
+        bsp: BspParams | Sequence[BspParams] | None = None,
         *,
         f: int | Sequence[int] = 1,
     ) -> "GroupBatch":
@@ -202,6 +202,10 @@ class GroupBatch:
         or per-kernel sequences.  Non-global (on-chip) LSUs are ignored, like
         in the scalar ``estimate``.
         """
+        if bsp is None:
+            from repro.core.model import _default_bsp
+
+            bsp = _default_bsp()
         n = len(kernels)
         drams = list(dram) if isinstance(dram, (list, tuple)) else [dram] * n
         bsps = list(bsp) if isinstance(bsp, (list, tuple)) else [bsp] * n

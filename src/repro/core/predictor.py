@@ -23,7 +23,7 @@ import dataclasses
 
 from repro.core import hbm as _hbm
 from repro.core import hlo_counter as _hc
-from repro.core.hbm import AccessClass, TpuParams, Traffic, TPU_V5E
+from repro.core.hbm import AccessClass, TpuParams, Traffic, _as_tpu_params
 
 _CLASS_BY_NAME = {
     "stream": AccessClass.STREAM,
@@ -85,11 +85,16 @@ def components_from_cost(hc: _hc.HloCost, *,
 def predict_step(
     hlo_text: str,
     cost: dict | None = None,
-    hw: TpuParams = TPU_V5E,
+    hw: TpuParams | None = None,
     *,
     gather_row_bytes: float = 512.0,
 ) -> StepPrediction:
-    """Predict per-device step time from ``compiled.as_text()``."""
+    """Predict per-device step time from ``compiled.as_text()``.
+
+    ``hw`` may be a :class:`TpuParams`, a ``repro.hw.Hardware`` spec, or
+    ``None`` (the registry's ``tpu_v5e`` preset).
+    """
+    hw = _as_tpu_params(hw)
     hc = _hc.analyze(hlo_text)
     comps = components_from_cost(hc, gather_row_bytes=gather_row_bytes)
     t_mem = _hbm.memory_time(comps, hw)
@@ -113,7 +118,7 @@ def predict_step(
 def predict(
     hlo_text: str,
     cost: dict | None = None,
-    hw: TpuParams = TPU_V5E,
+    hw: TpuParams | None = None,
     *,
     gather_row_bytes: float = 512.0,
 ) -> StepPrediction:

@@ -23,8 +23,13 @@ import dataclasses
 import json
 from typing import Any
 
-from repro.core.hbm import TpuParams, TPU_V5E
+from repro.core.hbm import TpuParams, _as_tpu_params
 from repro.core import predictor as _pred
+
+
+def _chip() -> TpuParams:
+    """The registry default chip's view (was the TPU_V5E constant)."""
+    return _as_tpu_params(None)
 
 
 @dataclasses.dataclass
@@ -45,6 +50,7 @@ class RooflineCell:
     t_memory_refined: float = 0.0
     t_collective: float = 0.0
     extra: dict[str, Any] = dataclasses.field(default_factory=dict)
+    hw: TpuParams | None = None   # the chip the terms were computed against
 
     @property
     def dominant(self) -> str:
@@ -81,15 +87,16 @@ class RooflineCell:
         collective-dominant -> wire-ideal / t_step."""
         if self.t_step <= 0:
             return 0.0
+        chip = self.hw if self.hw is not None else _chip()
         if self.dominant == "compute":
-            ideal = self.model_flops_global / (self.chips * TPU_V5E.peak_flops)
+            ideal = self.model_flops_global / (self.chips * chip.peak_flops)
         elif self.dominant == "memory":
             if self.model_bytes_global:
-                ideal = self.model_bytes_global / (self.chips * TPU_V5E.hbm_bw)
+                ideal = self.model_bytes_global / (self.chips * chip.hbm_bw)
             else:
                 ideal = self.t_memory_naive
         else:
-            ideal = self.collective_wire_bytes / (TPU_V5E.ici_bw * TPU_V5E.ici_links)
+            ideal = self.collective_wire_bytes / (chip.ici_bw * chip.ici_links)
         return min(1.0, ideal / self.t_step)
 
     def as_row(self) -> dict[str, Any]:
@@ -124,11 +131,12 @@ def build_cell(
     hlo_text: str,
     cost: dict[str, float] | None = None,
     model_flops_global: float,
-    hw: TpuParams = TPU_V5E,
+    hw: TpuParams | None = None,
     extra: dict[str, Any] | None = None,
 ) -> RooflineCell:
     """Cell from compiled HLO text (trip-aware static analysis; the raw
     ``cost_analysis`` dict is kept in ``extra`` for cross-checking)."""
+    hw = _as_tpu_params(hw)
     pred = _pred.predict_step(hlo_text, cost, hw)
     flops = pred.flops
     nbytes = pred.hbm_bytes
@@ -149,6 +157,7 @@ def build_cell(
         t_memory_refined=pred.t_memory,
         t_collective=pred.t_collective,
         extra=extra or {},
+        hw=hw,
     )
 
 

@@ -31,16 +31,19 @@ from typing import Any, Callable, Mapping, Sequence
 import numpy as np
 
 from repro.core import model_batch as _mb
-from repro.core.fpga import BspParams, DramParams, DDR4_1866, STRATIX10_BSP
+from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import LsuType
 from repro.deprecation import warn_deprecated
 
-#: Sweepable axes, in canonical order.  ``lsu_type``/``dram``/``bsp`` are
-#: categorical; the rest are numeric.
+#: Sweepable axes, in canonical order.  ``lsu_type``/``dram``/``bsp``/
+#: ``hardware`` are categorical; the rest are numeric.  A ``hardware`` axis
+#: value is a :class:`repro.hw.Hardware` spec (or ``None``): its DRAM/BSP
+#: views and persisted calibration override the ``dram``/``bsp`` axes at
+#: that point, so a single sweep fans out over (design x memory system).
 AXES = ("lsu_type", "n_ga", "simd", "n_elems", "delta", "elem_bytes",
-        "include_write", "val_constant", "dram", "bsp")
+        "include_write", "val_constant", "dram", "bsp", "hardware")
 
-_CATEGORICAL = {"lsu_type", "dram", "bsp"}
+_CATEGORICAL = {"lsu_type", "dram", "bsp", "hardware"}
 
 
 def _as_list(v) -> list:
@@ -162,6 +165,8 @@ class SweepResult:
                     v = _bsp_name(v)
                 elif name == "dram":
                     v = getattr(v, "name", repr(v))
+                elif name == "hardware":
+                    v = getattr(v, "name", "") if v is not None else ""
                 elif isinstance(v, (np.integer, np.bool_)):
                     v = v.item()
                 row[name] = v
@@ -194,6 +199,36 @@ def _factorize(objs) -> tuple[list, np.ndarray]:
             table.append(o)
         codes[i] = j
     return table, codes
+
+
+def _apply_hardware_axis(points: dict[str, np.ndarray], n: int,
+                         ) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Resolve the ``hardware`` axis into effective dram/bsp columns.
+
+    Points whose hardware spec is not ``None`` get that spec's DRAM/BSP
+    views in their ``dram``/``bsp`` columns (so reported configurations
+    describe what was actually scored) and its persisted ``host_factor`` in
+    the returned per-point scale array.  Views are constructed once per
+    unique spec, so downstream ``_factorize`` dedup still works.  Shared by
+    ``_build`` and the scalar Session backend — the two paths must resolve
+    identically for backend equivalence to hold.
+    """
+    hw_col = points.get("hardware")
+    scale = np.ones(n)
+    if hw_col is None or all(h is None for h in hw_col):
+        return points, scale
+    views: dict[int, tuple] = {}
+    dram_col = np.asarray(points["dram"], dtype=object).copy()
+    bsp_col = np.asarray(points["bsp"], dtype=object).copy()
+    for i, h in enumerate(hw_col):
+        if h is None:
+            continue
+        v = views.get(id(h))
+        if v is None:
+            v = views[id(h)] = (h.dram_params(), h.bsp_params(),
+                                float(h.host_factor))
+        dram_col[i], bsp_col[i], scale[i] = v
+    return {**points, "dram": dram_col, "bsp": bsp_col}, scale
 
 
 def _normalize_inert_axes(points: dict[str, np.ndarray],
@@ -237,6 +272,13 @@ def _build(points: dict[str, np.ndarray], n: int,
     * atomic: a group of ``n_ga`` atomic units (stride is always 1).
     """
     cats = cats or {}
+    points, hw_scale = _apply_hardware_axis(points, n)
+    if np.any(hw_scale != 1.0) or (points.get("hardware") is not None
+                                   and any(h is not None
+                                           for h in points["hardware"])):
+        # dram/bsp columns were rewritten per point; the precomputed
+        # factorizations no longer describe them.
+        cats = {k: v for k, v in cats.items() if k not in ("dram", "bsp")}
 
     def _cat(name):
         if name in cats:
@@ -300,6 +342,12 @@ def _build(points: dict[str, np.ndarray], n: int,
         **{k: vec([v, v]) for k, v in {**dram_f, **bsp_f}.items()},
     )
     est = (estimator or _mb.estimate_batch)(batch)
+    if np.any(hw_scale != 1.0):
+        # apply each point's persisted hardware calibration (host_factor)
+        est = dataclasses.replace(
+            est, t_exe=np.asarray(est.t_exe) * hw_scale,
+            t_ideal=np.asarray(est.t_ideal) * hw_scale,
+            t_ovh=np.asarray(est.t_ovh) * hw_scale)
     resource = np.bincount(kernel,
                            weights=np.asarray(batch.count * batch.ls_width,
                                               dtype=np.float64),
@@ -308,6 +356,9 @@ def _build(points: dict[str, np.ndarray], n: int,
 
 
 def _normalize_axes(overrides: Mapping[str, Any]) -> dict[str, list]:
+    from repro.hw import DEFAULT_BOARD, get as _hw_get
+
+    board = _hw_get(DEFAULT_BOARD)
     defaults = {
         "lsu_type": LsuType.BC_ALIGNED,
         "n_ga": 1,
@@ -317,8 +368,9 @@ def _normalize_axes(overrides: Mapping[str, Any]) -> dict[str, list]:
         "elem_bytes": 4,
         "include_write": True,
         "val_constant": False,
-        "dram": DDR4_1866,
-        "bsp": STRATIX10_BSP,
+        "dram": board.dram_params(),
+        "bsp": board.bsp_params(),
+        "hardware": None,
     }
     unknown = set(overrides) - set(AXES)
     if unknown:

@@ -37,9 +37,16 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.fpga import DDR4_1866, DramParams
+from repro.core.fpga import DramParams
 from repro.core.lsu import Lsu, LsuType
 from repro.core.model_batch import GroupBatch, estimate_batch
+
+
+def _default_dram() -> DramParams:
+    """The registry default board's DRAM view (was the DDR4_1866 const)."""
+    from repro.hw import DEFAULT_BOARD, get as _get
+
+    return _get(DEFAULT_BOARD).dram_params()
 
 #: Modeled bytes of one LSU access when mapping HLO traffic onto LSU groups.
 #: 64 B = the DDR4 minimum burst (dq * bl = 8 * 8) of the paper's Table III
@@ -202,7 +209,7 @@ def lsus_from_classes(bytes_by_class: dict, *,
     return lsus
 
 
-def calibrate_dram(measured_bw: float, base: DramParams = DDR4_1866,
+def calibrate_dram(measured_bw: float, base: DramParams | None = None,
                    name: str = "host-calibrated") -> DramParams:
     """DRAM parameter set whose Eq. 2 peak bandwidth equals ``measured_bw``.
 
@@ -210,6 +217,7 @@ def calibrate_dram(measured_bw: float, base: DramParams = DDR4_1866,
     timing overheads (t_rcd/t_rp/t_wr) keep their datasheet values — the
     same split the paper uses between datasheet rows and measured rows.
     """
+    base = base if base is not None else _default_dram()
     return dataclasses.replace(base, name=name,
                                f_mem=measured_bw / (2.0 * base.dq))
 
@@ -264,7 +272,7 @@ class ValidationReport:
 def _validate(cases: Sequence[ValidationCase] | None = None, *,
               iters: int = 3, warmup: int = 1,
               dram: DramParams | None = None,
-              base: DramParams = DDR4_1866,
+              base: DramParams | None = None,
               fit_host_factor: bool = True) -> ValidationReport:
     """Run the measured-vs-predicted loop over ``cases``.
 
@@ -285,6 +293,7 @@ def _validate(cases: Sequence[ValidationCase] | None = None, *,
 
     from repro import compat
 
+    base = base if base is not None else _default_dram()
     backend = jax.default_backend()
     interpret = compat.default_interpret()
     cases = list(cases) if cases is not None else default_cases()
@@ -342,7 +351,7 @@ def _validate(cases: Sequence[ValidationCase] | None = None, *,
 def validate(cases: Sequence[ValidationCase] | None = None, *,
              iters: int = 3, warmup: int = 1,
              dram: DramParams | None = None,
-             base: DramParams = DDR4_1866) -> ValidationReport:
+             base: DramParams | None = None) -> ValidationReport:
     """Deprecated: use ``repro.Session(...).validate(cases)``."""
     from repro.deprecation import warn_deprecated
 

@@ -1,0 +1,34 @@
+"""``repro.hw`` — the pluggable hardware-spec layer.
+
+One serializable description of a memory system (:class:`Hardware`,
+composing :class:`MemorySystem` + :class:`DramOrganization` +
+:class:`ClockDomain`) behind a named registry:
+
+    >>> from repro import hw
+    >>> board = hw.get("stratix10_ddr4_1866")       # preset lookup
+    >>> sess = repro.Session().with_hardware(board) # evaluate against it
+    >>> hw.register(board.with_efficiencies(k_gather=0.5).with_name("mine"))
+    >>> spec = hw.Hardware.from_json(saved)         # persisted calibration
+
+Presets: ``tpu_v5e``, ``tpu_v4``, ``stratix10_ddr4_1866``,
+``stratix10_ddr4_2666`` (see :mod:`repro.hw.presets`).  The deprecated
+module constants ``repro.core.fpga.DDR4_1866``/``STRATIX10_BSP`` and
+``repro.core.hbm.TPU_V5E`` are thin aliases over these entries.
+"""
+from repro.hw.registry import get, names, register, unregister
+from repro.hw.spec import (
+    SCHEMA_VERSION,
+    ClockDomain,
+    DramOrganization,
+    Hardware,
+    MemorySystem,
+    enable_jax,
+)
+from repro.hw import presets  # populates the registry
+from repro.hw.presets import DEFAULT_BOARD, DEFAULT_CHIP
+
+__all__ = [
+    "Hardware", "MemorySystem", "DramOrganization", "ClockDomain",
+    "get", "register", "unregister", "names", "enable_jax",
+    "DEFAULT_BOARD", "DEFAULT_CHIP", "SCHEMA_VERSION", "presets",
+]

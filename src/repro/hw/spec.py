@@ -1,0 +1,389 @@
+"""The unified, serializable memory-system description: the ``Hardware`` spec.
+
+The paper's core claim is that execution time of a memory-bound design is
+predicted by a careful description of the *memory organization* — DRAM
+timings, per-access-class efficiencies, BSP/clock parameters.  Before this
+module that description was smeared across three places: the TPU constants
+in :mod:`repro.core.hbm` (``TpuParams``), the DRAM datasheet / BSP values in
+:mod:`repro.core.fpga`, and the bank organization buried in
+:mod:`repro.core.dramsim`.  ``Hardware`` absorbs all three into one frozen,
+registry-backed (:mod:`repro.hw.registry`), JSON-round-trippable spec:
+
+* :class:`MemorySystem`   — per-access-class bandwidth efficiencies (the
+  ``K_lsu`` analogue) + per-transaction overheads and capacities;
+* :class:`DramOrganization` — channel/bank/burst geometry and the datasheet
+  timings (paper Tables II-III + the simulator's bank model);
+* :class:`ClockDomain`    — BSP/IP parameters and the clock-side numbers
+  (kernel frequency, compute peak, interconnect).
+
+A ``Hardware`` knows how to render itself as the three legacy parameter
+views (:meth:`Hardware.dram_params`, :meth:`Hardware.bsp_params`,
+:meth:`Hardware.tpu_params`) so every existing model path — scalar,
+numpy-batch, jax-jit — consumes the same spec, and
+:meth:`Hardware.from_calibration` folds a validation report's fitted
+bandwidth, host factor and per-class errors back into a *persisted* spec
+(``to_json``/``from_json``), closing the calibration loop that used to live
+as a transient scalar on ``Session``.
+
+All four dataclasses register as jax pytrees (:func:`enable_jax`) with the
+numeric fields as leaves, so a spec can be threaded through ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import TYPE_CHECKING, Any, Mapping
+
+if TYPE_CHECKING:  # the legacy view classes; imported lazily at runtime so
+    # repro.hw stays import-clean of repro.core (repro.core re-exports the
+    # registry-built constants, which would otherwise be circular).
+    from repro.core.fpga import BspParams, DramParams
+    from repro.core.hbm import TpuParams
+
+#: Bump when a field is added/renamed so persisted specs are identifiable.
+SCHEMA_VERSION = 1
+
+#: Validation-kernel name -> the access class its error calibrates.
+_KERNEL_CLASS = {
+    "membench_aligned": "stream",
+    "membench_strided": "strided",
+    "membench_gather": "gather",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySystem:
+    """Bandwidth side of the spec: efficiencies + transaction overheads.
+
+    ``k_*`` are the per-access-class efficiency factors (the paper's
+    ``K_lsu`` analogue): the fraction of ``peak_bw`` a pure stream of that
+    class sustains.  ``txn_bytes``/``t_row``/``mlp`` are the transaction
+    model of :func:`repro.core.hbm.traffic_time` (granularity, row-miss
+    latency, outstanding-transaction parallelism).
+    """
+
+    peak_bw: float                  # interface bandwidth ceiling [B/s]
+    txn_bytes: int = 512            # transaction granularity [B]
+    t_row: float = 28e-9            # row-miss latency class [s]
+    mlp: int = 64                   # outstanding-transaction parallelism
+    k_stream: float = 0.92          # per-class efficiencies (K_lsu analogue)
+    k_strided: float = 0.92
+    k_gather: float = 0.92
+    capacity_bytes: float = 16e9    # device memory capacity [B]
+    local_bytes: float = 128e6      # on-chip memory (VMEM / BRAM) [B]
+
+
+@dataclasses.dataclass(frozen=True)
+class DramOrganization:
+    """Geometry + datasheet timings of the DRAM behind the interface.
+
+    The ``f_mem``/``dq``/``bl``/``t_*`` rows are paper Table III; ``banks``/
+    ``row_bytes``/``interleave_bytes`` are the bank organization the
+    event-driven simulator models (previously hardcoded there); ``channels``
+    scales the legacy single-channel :class:`DramParams` view's clock.
+    """
+
+    name: str = "dram"
+    f_mem: float = 933.3e6          # I/O bus clock [Hz]
+    dq: int = 8                     # data width [B]
+    bl: int = 8                     # burst length [beats]
+    t_rcd: float = 13.5e-9          # row activation [s]
+    t_rp: float = 13.5e-9           # precharge [s]
+    t_wr: float = 15e-9             # write recovery [s]
+    channels: int = 1
+    banks: int = 4
+    row_bytes: int = 8192           # page size per bank [B]
+    interleave_bytes: int = 1024    # controller interleave granularity [B]
+
+    @property
+    def bw_mem(self) -> float:
+        """Peak DRAM bandwidth [B/s] across all channels (Eq. 2)."""
+        return self.dq * 2.0 * self.f_mem * self.channels
+
+    @property
+    def t_row(self) -> float:
+        """Row-miss inter-command delay (Eq. 6): T_RCD + T_RP."""
+        return self.t_rcd + self.t_rp
+
+    @property
+    def min_burst_bytes(self) -> int:
+        return self.dq * self.bl
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockDomain:
+    """BSP/IP parameters and the clock-side constants.
+
+    ``burst_cnt``/``max_th`` are the generated-Verilog parameters of paper
+    Table II (Eq. 5 / Eq. 7 triggers); ``f_kernel`` the kernel clock;
+    ``peak_flops`` and the ``ici_*`` family feed the compute and collective
+    terms of the TPU-transplant predictor.
+    """
+
+    burst_cnt: int = 4              # log2(max #min-bursts per transaction)
+    max_th: int = 128               # max coalesced threads per request
+    f_kernel: float = 300e6         # kernel/fabric clock [Hz]
+    peak_flops: float = 197e12      # chip compute peak [FLOP/s]
+    ici_bw: float = 50e9            # interconnect [B/s per link]
+    ici_links: int = 4
+    ici_hop_latency: float = 1e-6   # per-hop collective launch latency [s]
+
+
+def _clamp_k(k: float) -> float:
+    return min(1.0, max(1e-3, float(k)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """One complete, serializable memory-system description.
+
+    Compose with the ``with_*`` builders (mirroring :class:`repro.Design`),
+    persist with ``to_json``/``from_json``, look presets up by name through
+    :mod:`repro.hw` (``hw.get("tpu_v5e")``), and hand to
+    ``Session.with_hardware`` to evaluate designs against it.
+    ``host_factor`` is the persisted calibration scalar (measured/modeled on
+    the stream anchor, 1.0 = uncalibrated).
+    """
+
+    name: str
+    mem: MemorySystem
+    dram: DramOrganization = DramOrganization()
+    clock: ClockDomain = ClockDomain()
+    host_factor: float = 1.0
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("a Hardware spec needs a non-empty name")
+        # plain numbers only: under jax tracing host_factor is a tracer and
+        # must pass through unchecked (pytree unflatten rebuilds the spec).
+        if isinstance(self.host_factor, (int, float)) \
+                and not self.host_factor > 0:
+            raise ValueError("host_factor must be > 0")
+
+    # -- builder-style derivation ------------------------------------------
+
+    def with_name(self, name: str) -> "Hardware":
+        return dataclasses.replace(self, name=name)
+
+    def with_mem(self, mem: MemorySystem) -> "Hardware":
+        return dataclasses.replace(self, mem=mem)
+
+    def with_dram(self, dram: DramOrganization) -> "Hardware":
+        return dataclasses.replace(self, dram=dram)
+
+    def with_clock(self, clock: ClockDomain) -> "Hardware":
+        return dataclasses.replace(self, clock=clock)
+
+    def with_host_factor(self, host_factor: float) -> "Hardware":
+        return dataclasses.replace(self, host_factor=float(host_factor))
+
+    def with_efficiencies(self, **k: float) -> "Hardware":
+        """Replace per-class efficiency factors: ``with_efficiencies(
+        k_stream=0.9, k_gather=0.5)`` (values clamped to (0, 1])."""
+        unknown = set(k) - {"k_stream", "k_strided", "k_gather"}
+        if unknown:
+            raise TypeError(f"unknown efficiency factors: {sorted(unknown)}")
+        return dataclasses.replace(
+            self, mem=dataclasses.replace(
+                self.mem, **{n: _clamp_k(v) for n, v in k.items()}))
+
+    # -- legacy parameter views --------------------------------------------
+
+    def dram_params(self) -> "DramParams":
+        """The faithful-FPGA-model view (:class:`repro.core.fpga.DramParams`).
+
+        Multi-channel organizations fold ``channels`` into the view's clock
+        so ``bw_mem`` stays the spec's aggregate bandwidth.
+        """
+        from repro.core.fpga import DramParams
+
+        d = self.dram
+        return DramParams(
+            name=d.name, f_mem=d.f_mem * d.channels, dq=d.dq, bl=d.bl,
+            t_rcd=d.t_rcd, t_rp=d.t_rp, t_wr=d.t_wr,
+            banks=d.banks, row_bytes=d.row_bytes)
+
+    def bsp_params(self) -> "BspParams":
+        """The BSP/IP view (:class:`repro.core.fpga.BspParams`)."""
+        from repro.core.fpga import BspParams
+
+        return BspParams(burst_cnt=self.clock.burst_cnt,
+                         max_th=self.clock.max_th)
+
+    def tpu_params(self) -> "TpuParams":
+        """The TPU-transplant view (:class:`repro.core.hbm.TpuParams`)."""
+        from repro.core.hbm import TpuParams
+
+        m, c = self.mem, self.clock
+        return TpuParams(
+            name=self.name, peak_flops=c.peak_flops, hbm_bw=m.peak_bw,
+            ici_bw=c.ici_bw, ici_links=c.ici_links,
+            hbm_bytes=m.capacity_bytes, vmem_bytes=m.local_bytes,
+            txn_bytes=m.txn_bytes, t_row=m.t_row, mlp=m.mlp,
+            ici_hop_latency=c.ici_hop_latency,
+            k_stream=m.k_stream, k_strided=m.k_strided, k_gather=m.k_gather)
+
+    # -- construction from the legacy parameter families -------------------
+
+    @classmethod
+    def from_parts(cls, name: str, *, dram: "DramParams",
+                   bsp: "BspParams | None" = None,
+                   tpu: "TpuParams | None" = None,
+                   host_factor: float = 1.0) -> "Hardware":
+        """Build a spec out of the legacy parameter objects.
+
+        ``dram``/``bsp`` populate the organization and clock;  ``tpu`` (when
+        given) supplies the bandwidth side, otherwise the memory system is
+        derived from the DRAM datasheet (peak bandwidth, row latency, bank
+        parallelism, BSP transaction granularity).
+        """
+        from repro.core.fpga import BspParams
+
+        bsp = bsp if bsp is not None else BspParams()
+        org = DramOrganization(
+            name=dram.name, f_mem=dram.f_mem, dq=dram.dq, bl=dram.bl,
+            t_rcd=dram.t_rcd, t_rp=dram.t_rp, t_wr=dram.t_wr,
+            banks=dram.banks, row_bytes=dram.row_bytes)
+        if tpu is not None:
+            mem = MemorySystem(
+                peak_bw=tpu.hbm_bw, txn_bytes=tpu.txn_bytes,
+                t_row=tpu.t_row, mlp=tpu.mlp, k_stream=tpu.k_stream,
+                k_strided=tpu.k_strided, k_gather=tpu.k_gather,
+                capacity_bytes=tpu.hbm_bytes, local_bytes=tpu.vmem_bytes)
+            clock = ClockDomain(
+                burst_cnt=bsp.burst_cnt, max_th=bsp.max_th,
+                peak_flops=tpu.peak_flops, ici_bw=tpu.ici_bw,
+                ici_links=tpu.ici_links,
+                ici_hop_latency=tpu.ici_hop_latency)
+        else:
+            mem = MemorySystem(
+                peak_bw=org.bw_mem,
+                txn_bytes=bsp.max_transaction_bytes(dram),
+                t_row=org.t_row, mlp=org.banks)
+            clock = ClockDomain(burst_cnt=bsp.burst_cnt, max_th=bsp.max_th)
+        return cls(name=name, mem=mem, dram=org, clock=clock,
+                   host_factor=float(host_factor))
+
+    @classmethod
+    def from_calibration(cls, report: Any, *,
+                         base: "Hardware | None" = None,
+                         name: str | None = None) -> "Hardware":
+        """Fold a validation report back into a persistable spec.
+
+        ``report`` is a ``Session.validate`` result (or the underlying
+        ``repro.core.validate.ValidationReport``): its fitted DRAM parameter
+        set becomes the organization, its stream-anchor bandwidth the memory
+        system's ``peak_bw``, its host factor the persisted ``host_factor``,
+        and each class-pure membench kernel's predicted/measured ratio
+        scales that class's efficiency factor — so a re-used spec predicts
+        what ``Session.with_calibration(report)`` predicts, but from disk.
+        """
+        from repro.hw.registry import get as _get
+
+        base = base if base is not None else _get("stratix10_ddr4_1866")
+        d: DramParams = report.dram
+        org = DramOrganization(
+            name=d.name, f_mem=d.f_mem, dq=d.dq, bl=d.bl,
+            t_rcd=d.t_rcd, t_rp=d.t_rp, t_wr=d.t_wr,
+            banks=d.banks, row_bytes=d.row_bytes,
+            interleave_bytes=base.dram.interleave_bytes)
+        k = {"k_stream": base.mem.k_stream, "k_strided": base.mem.k_strided,
+             "k_gather": base.mem.k_gather}
+        for r in report.results:
+            cls_name = _KERNEL_CLASS.get(r.name)
+            if cls_name and r.measured_s > 0 and r.predicted_s > 0:
+                k[f"k_{cls_name}"] = _clamp_k(
+                    k[f"k_{cls_name}"] * r.predicted_s / r.measured_s)
+        measured_bw = float(getattr(report, "measured_bw", 0.0) or 0.0)
+        mem = dataclasses.replace(
+            base.mem, peak_bw=measured_bw or org.bw_mem, **k)
+        return cls(
+            name=name or f"{base.name}-calibrated",
+            mem=mem, dram=org, clock=base.clock,
+            host_factor=float(getattr(report, "calibration_factor", 1.0)))
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-able dict (stable keys; includes the schema version)."""
+        return {
+            "schema": SCHEMA_VERSION,
+            "name": self.name,
+            "host_factor": self.host_factor,
+            "mem": dataclasses.asdict(self.mem),
+            "dram": dataclasses.asdict(self.dram),
+            "clock": dataclasses.asdict(self.clock),
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, obj: Mapping[str, Any]) -> "Hardware":
+        schema = obj.get("schema", SCHEMA_VERSION)
+        if schema > SCHEMA_VERSION:
+            raise ValueError(
+                f"Hardware spec schema {schema} is newer than this "
+                f"library's {SCHEMA_VERSION}")
+
+        def _load(klass, data):
+            known = {f.name for f in dataclasses.fields(klass)}
+            return klass(**{k: v for k, v in dict(data).items() if k in known})
+
+        return cls(
+            name=str(obj["name"]),
+            mem=_load(MemorySystem, obj["mem"]),
+            dram=_load(DramOrganization, obj["dram"]),
+            clock=_load(ClockDomain, obj["clock"]),
+            host_factor=float(obj.get("host_factor", 1.0)))
+
+    @classmethod
+    def from_json(cls, text: str) -> "Hardware":
+        return cls.from_dict(json.loads(text))
+
+
+# ---------------------------------------------------------------------------
+# jax pytree registration
+# ---------------------------------------------------------------------------
+
+_PYTREE_REGISTERED = False
+
+
+def enable_jax() -> bool:
+    """Register the spec family as jax pytrees (idempotent; False w/o jax).
+
+    Numeric fields become leaves and name strings auxiliary data, so a
+    ``Hardware`` can be passed straight through ``jax.jit``/``vmap`` like
+    the :class:`repro.core.model_batch.GroupBatch` it rides along with.
+    """
+    global _PYTREE_REGISTERED
+    if _PYTREE_REGISTERED:
+        return True
+    try:
+        from jax import tree_util as _jtu
+    except ImportError:
+        return False
+
+    def _register(klass, aux_fields: tuple[str, ...] = ()):
+        leaf = tuple(f.name for f in dataclasses.fields(klass)
+                     if f.name not in aux_fields)
+
+        def flatten(x):
+            return (tuple(getattr(x, n) for n in leaf),
+                    tuple(getattr(x, n) for n in aux_fields))
+
+        def unflatten(aux, children):
+            return klass(**dict(zip(leaf, children)),
+                         **dict(zip(aux_fields, aux)))
+
+        try:
+            _jtu.register_pytree_node(klass, flatten, unflatten)
+        except ValueError:  # pragma: no cover — already registered (reload)
+            pass
+
+    _register(MemorySystem)
+    _register(DramOrganization, aux_fields=("name",))
+    _register(ClockDomain)
+    _register(Hardware, aux_fields=("name",))
+    _PYTREE_REGISTERED = True
+    return True

@@ -8,9 +8,9 @@ import pytest
 
 import repro
 from repro import Design, Estimate, Session, Space
-from repro.core import DDR4_1866, DDR4_2666, LsuType
+from repro.core import DDR4_1866, DDR4_2666, LsuType, STRATIX10_BSP
 from repro.core.apps import microbench
-from repro.core.fpga import BspParams, STRATIX10_BSP
+from repro.core.fpga import BspParams
 
 ALL_TYPES = [LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
              LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED]

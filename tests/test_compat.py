@@ -139,7 +139,7 @@ class TestAutotuneFailureHandling:
         """Make analyze_candidate raise per-candidate errors (or succeed)."""
         from repro.core import autotune as AT
 
-        def fake_analyze(cfg, shape, mesh, candidate, cache=None):
+        def fake_analyze(cfg, shape, mesh, candidate, cache=None, hw=None):
             err = errors.get(candidate.name)
             if err is not None:
                 raise err

@@ -25,7 +25,7 @@ settings = hypothesis.settings(max_examples=30, deadline=None)
 def test_aligned_model_matches_sim(n_ga, simd, log_n, dram):
     """Burst-coalesced aligned: paper's own error envelope is <10%; we allow
     15% against the independent oracle."""
-    from repro.core.fpga import DRAM_CONFIGS
+    from repro.core import DRAM_CONFIGS
     d = DRAM_CONFIGS[dram]
     lsus = microbench(LsuType.BC_ALIGNED, n_ga=n_ga, simd=simd,
                       n_elems=1 << log_n)

@@ -1,0 +1,53 @@
+"""Property-based invariants of the access-class transaction model
+(`hbm.traffic_time`) for **every registered Hardware spec**: time is
+monotonically non-decreasing in the byte count, and no DRAM-touching class
+is ever predicted faster than a pure stream of the same size."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')")
+import hypothesis.strategies as st  # noqa: E402
+
+from repro import hw  # noqa: E402
+from repro.core.hbm import AccessClass, Traffic, traffic_time  # noqa: E402
+
+#: Classes that reach the memory controller (VMEM is on-chip by definition).
+DRAM_CLASSES = [AccessClass.STREAM, AccessClass.STRIDED,
+                AccessClass.GATHER, AccessClass.SERIALIZED]
+
+settings = hypothesis.settings(max_examples=50, deadline=None)
+
+
+@settings
+@hypothesis.given(
+    cls=st.sampled_from(DRAM_CLASSES),
+    log_n=st.integers(6, 26),
+    extra=st.integers(0, 1 << 22),
+    row=st.sampled_from([1.0, 64.0, 512.0, 1024.0, 4096.0, 1 << 20]),
+)
+def test_traffic_time_monotone_in_nbytes(cls, log_n, extra, row):
+    for name in hw.names():
+        spec = hw.get(name)
+        nb = float(1 << log_n)
+        t_small = sum(traffic_time(Traffic(cls, nb, row_bytes=row), spec))
+        t_large = sum(traffic_time(Traffic(cls, nb + extra, row_bytes=row),
+                                   spec))
+        assert t_large >= t_small, (name, cls)
+
+
+@settings
+@hypothesis.given(
+    cls=st.sampled_from(DRAM_CLASSES),
+    log_n=st.integers(6, 26),
+    row=st.sampled_from([1.0, 64.0, 512.0, 1024.0, 4096.0, 1 << 20]),
+)
+def test_traffic_time_never_below_stream_bound(cls, log_n, row):
+    """A pure stream is the fastest way to move N bytes; strided, gathered
+    and serialized traffic of the same size can only be slower."""
+    for name in hw.names():
+        spec = hw.get(name)
+        nb = float(1 << log_n)
+        t_cls = sum(traffic_time(Traffic(cls, nb, row_bytes=row), spec))
+        t_stream = sum(traffic_time(
+            Traffic(AccessClass.STREAM, nb, row_bytes=row), spec))
+        assert t_cls >= t_stream * (1.0 - 1e-12), (name, cls)

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import hlo as HLO
-from repro.core.hbm import AccessClass, TPU_V5E, Traffic, memory_time, traffic_time
+from repro import TPU_V5E
+from repro.core.hbm import AccessClass, Traffic, memory_time, traffic_time
 from repro.core.predictor import predict
 from repro.core.roofline import RooflineCell, build_cell
 

@@ -211,7 +211,8 @@ class TestBatchedAutotuneScorer:
         """The batched ranker reproduces predictor.predict's roofline terms."""
         from repro.core import autotune as AT
         from repro.core import hbm as _hbm
-        from repro.core.hbm import AccessClass, TPU_V5E, Traffic
+        from repro import TPU_V5E
+        from repro.core.hbm import AccessClass, Traffic
         from repro.core import predictor as _pred
 
         rng = np.random.default_rng(5)

@@ -6,7 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core.fpga import DDR4_1866
+from repro.core import DDR4_1866
 from repro.core.lsu import LsuType
 from repro.core import validate as V
 
