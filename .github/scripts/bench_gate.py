@@ -1,0 +1,135 @@
+"""Streaming-sweep perf gate: fail CI on a >30% points/sec regression.
+
+Compares the freshly written ``BENCH_smoke.json`` (produced by
+``python -m benchmarks.run --smoke --out json`` earlier in the job) against
+the committed baseline (``git show HEAD:BENCH_smoke.json``).  For every
+streaming backend present in both files' ``stream_1m`` details, the fresh
+points/sec must be at least ``1 - TOLERANCE`` of the committed value.
+
+Absolute points/sec also moves with the runner class the baseline was
+committed from, so the gate cross-checks two in-run controls before
+excusing a drop below the floor:
+
+* ``speedup_vs_materialized`` — a streaming-engine regression (chunking,
+  reducers, dispatch) drags this ratio down and fails regardless of the
+  machine;
+* the ``materialized-baseline`` row's own points/sec — if the machine
+  still runs the materialized workflow at committed speed, an absolute
+  streaming drop is real and fails even with the ratio intact.
+
+Only when *both* the streaming and materialized throughput dropped
+together (a slower runner — or, indistinguishably, a proportional
+slowdown of the scoring core both paths share) does the gate pass with a
+notice; that shared-core case is tracked by the recorded absolute numbers
+in the artifact but cannot be hard-gated without a model-independent
+machine probe.
+
+A missing baseline entry (first run after the feature lands, or a renamed
+backend) passes with a notice — the gate ratchets only what is recorded.
+The committed baseline should be refreshed (re-run the smoke bench and
+commit the JSON) whenever the engine or the benchmark grid intentionally
+changes.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+TOLERANCE = 0.30
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+FRESH = ROOT / "BENCH_smoke.json"
+
+
+def stream_rows(payload: dict) -> dict[str, dict]:
+    rows = (payload.get("details") or {}).get("stream_1m") or []
+    return {r["backend"]: r for r in rows
+            if r.get("backend") != "materialized-baseline"}
+
+
+def baseline_pps(payload: dict) -> float | None:
+    rows = (payload.get("details") or {}).get("stream_1m") or []
+    for r in rows:
+        if r.get("backend") == "materialized-baseline":
+            return float(r["points_per_sec"])
+    return None
+
+
+def main() -> int:
+    if not FRESH.exists():
+        print(f"bench gate: {FRESH} missing (run benchmarks.run --smoke "
+              f"--out json first)")
+        return 1
+    fresh_payload = json.loads(FRESH.read_text())
+    fresh = stream_rows(fresh_payload)
+    fresh_base = baseline_pps(fresh_payload)
+    if not fresh:
+        print("bench gate: fresh BENCH_smoke.json has no stream_1m rows")
+        return 1
+
+    try:
+        committed_text = subprocess.run(
+            ["git", "show", "HEAD:BENCH_smoke.json"], cwd=ROOT,
+            capture_output=True, text=True, check=True).stdout
+    except subprocess.CalledProcessError:
+        print("bench gate: no committed BENCH_smoke.json baseline — passing")
+        return 0
+    base_payload = json.loads(committed_text)
+    base = stream_rows(base_payload)
+    committed_base = baseline_pps(base_payload)
+    if not base:
+        print("bench gate: committed baseline has no stream_1m rows — "
+              "passing (first run records it)")
+        return 0
+
+    failures = []
+    for backend, row in sorted(fresh.items()):
+        if not row.get("agree_1e6", False):
+            failures.append(f"{backend}: streaming != materialized at 1e-6")
+            continue
+        ref = base.get(backend)
+        if ref is None:
+            print(f"bench gate: {backend}: no committed baseline — skipped")
+            continue
+        got, want = float(row["points_per_sec"]), float(ref["points_per_sec"])
+        floor = (1.0 - TOLERANCE) * want
+        if got >= floor:
+            print(f"bench gate: {backend}: {got:,.0f} pps vs committed "
+                  f"{want:,.0f} pps (floor {floor:,.0f}) -> OK")
+            continue
+        # Below the absolute floor: excuse only a whole-machine slowdown —
+        # the streaming/materialized ratio must have held AND the
+        # materialized workflow itself must have slowed past the same
+        # tolerance in this run.
+        got_su = float(row.get("speedup_vs_materialized", 0.0))
+        want_su = float(ref.get("speedup_vs_materialized", 0.0))
+        ratio_held = want_su > 0 and got_su >= (1.0 - TOLERANCE) * want_su
+        machine_slow = (fresh_base is not None and committed_base is not None
+                        and fresh_base < (1.0 - TOLERANCE) * committed_base)
+        if ratio_held and machine_slow:
+            print(f"bench gate: {backend}: {got:,.0f} pps below the "
+                  f"{floor:,.0f} floor, but the materialized baseline "
+                  f"slowed too ({fresh_base:,.0f} vs committed "
+                  f"{committed_base:,.0f} pps) and the speedup held "
+                  f"({got_su:.1f}x vs {want_su:.1f}x) — slower machine, "
+                  f"not a streaming regression -> OK")
+            continue
+        print(f"bench gate: {backend}: {got:,.0f} pps vs committed "
+              f"{want:,.0f} pps (floor {floor:,.0f}), speedup {got_su:.1f}x "
+              f"vs {want_su:.1f}x, baseline "
+              f"{fresh_base and f'{fresh_base:,.0f}'} vs "
+              f"{committed_base and f'{committed_base:,.0f}'} -> REGRESSED")
+        failures.append(
+            f"{backend}: {got:,.0f} pps is >{TOLERANCE:.0%} below the "
+            f"committed {want:,.0f} pps without a matching whole-machine "
+            f"slowdown (speedup {want_su:.1f}x -> {got_su:.1f}x)")
+    if failures:
+        print("bench gate: FAIL\n  " + "\n  ".join(failures))
+        return 1
+    print("bench gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

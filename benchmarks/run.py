@@ -8,8 +8,9 @@ Usage:
     python -m benchmarks.run --smoke --out json         # fast CI job
 
 ``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
-Fig. 5 stride, and a reduced design-space sweep) and, with ``--out``,
-writes the full results as a JSON artifact for CI upload.  ``--out json``
+Fig. 5 stride, a reduced design-space sweep, and the 1M-point streaming
+sweep whose per-backend points/sec + peak RSS feed the CI perf gate) and,
+with ``--out``, writes the full results as a JSON artifact for CI upload.  ``--out json``
 resolves to ``BENCH_smoke.json`` at the repository root — the recorded
 perf-trajectory artifact CI uploads.  ``--hw <name>`` re-runs everything
 against a ``repro.hw`` registry spec (e.g. ``stratix10_ddr4_2666``,
@@ -91,6 +92,12 @@ def main() -> None:
         details["sweep"] = rows
         summary.append(("sweep", us, _derive("sweep", rows)))
 
+        # 1M-point streaming sweep: points/sec + peak RSS per backend vs the
+        # materialize-everything baseline (the perf-gate entry CI watches).
+        rows, us = PT.timed(lambda: SB.stream_bench(session=session))
+        details["stream_1m"] = rows
+        summary.append(("stream_1m", us, _derive("stream_1m", rows)))
+
     if not args.smoke:
         # roofline (reads dry-run artifacts if present)
         try:
@@ -164,6 +171,11 @@ def _derive(name: str, rows: list[dict]) -> str:
         r = rows[0]
         return (f"points={r['n_points']} speedup={r['speedup']}x "
                 f"agree={r['agree_rtol_1e6']} pareto={r['pareto_points']}")
+    if name == "stream_1m":
+        parts = [f"{r['backend']}={r['points_per_sec']:,.0f}pps/"
+                 f"{r['peak_rss_mb']:.0f}MB" for r in rows]
+        agree = all(r["agree_1e6"] for r in rows)
+        return f"points={rows[0]['n_points']} {' '.join(parts)} agree={agree}"
     if name == "table6_kernel_validation":
         errs = [r["err_pct"] for r in rows if isinstance(r["err_pct"], float)]
         fails = len(rows) - len(errs)

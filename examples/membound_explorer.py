@@ -91,6 +91,40 @@ def sweep_demo() -> None:
             break
 
 
+def stream_demo() -> None:
+    """Sweep a 200k+-point space in bounded memory: the streaming engine
+    (the same path benchmarks/sweep_bench.py drives at >= 1M points)."""
+    from repro.core import LsuType
+
+    sess = _session()
+    axes = dict(
+        lsu_type=[LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+                  LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED],
+        n_ga=list(range(1, 11)),
+        simd=[1, 2, 4, 8, 16],
+        n_elems=[1 << e for e in range(14, 22)],
+        delta=list(range(1, 17)),
+        include_write=[False, True],
+        val_constant=[False, True],
+        elem_bytes=[4, 8],
+    )
+    space = Space.grid(**axes).stream(chunk_size=1 << 17)
+    t0 = time.perf_counter()
+    res = sess.sweep(space)       # folds into Pareto/top-k/stats reducers
+    dt = time.perf_counter() - t0
+    s = res.summary()
+    print(f"\nStreaming sweep: {s['n_points']:,} points in {dt:.2f} s "
+          f"({s['n_points'] / dt:,.0f} points/s), "
+          f"{len(res.resource)} survivors held in memory")
+    print(f"memory-bound: {s['memory_bound_points']:,}/{s['n_points']:,}; "
+          f"Pareto front: {s['pareto_points']} points; "
+          f"fastest {s['t_exe_min_ms']:.4f} ms")
+    for row in res.top_k(3):
+        print(f"  {row['lsu_type']:>14s} n_ga={row['n_ga']} "
+              f"simd={row['simd']:2d} delta={row['delta']}: "
+              f"{row['t_exe_ms']:.3f} ms ({row['eff_bw_gbs']:.1f} GB/s)")
+
+
 def validate_demo() -> None:
     """Close the loop: measure the Pallas kernels and score the analytical
     model against the measurements (paper-style error table)."""
@@ -156,12 +190,14 @@ def main() -> None:
           f"prefetch)")
 
     sweep_demo()
+    stream_demo()
     validate_demo()
 
 
 if __name__ == "__main__":
     if "--sweep-only" in sys.argv[1:]:
         sweep_demo()
+        stream_demo()
     elif "--validate" in sys.argv[1:]:
         validate_demo()
     else:

@@ -20,11 +20,17 @@ constants re-exported below (``DDR4_1866`` …) are built from those registry
 entries; their former homes (``repro.core.fpga.DDR4_1866``,
 ``repro.core.hbm.TPU_V5E``) are one-release ``DeprecationWarning`` aliases.
 
+Million-point design spaces stream instead of materializing:
+``sess.sweep(repro.Space.grid(...).stream(), chunk_size=65536)`` enumerates
+points lazily, evaluates fixed-shape chunks (sharded across local devices
+on the ``jax-jit`` backend) and folds them into online Pareto/top-k/stats
+reducers, so peak memory is O(chunk + front + k) at any sweep size.
+
 Everything else (``repro.core.*``, ``repro.kernels.*``, ``repro.launch.*``)
-is implementation; the pre-PR-3 entry points (``model.estimate``,
-``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
-``autotune.autotune``, ``validate.validate``) remain importable for one
-release as :class:`DeprecationWarning` shims over this API.
+is implementation; the pre-PR-3 module-level entry points
+(``model.estimate``, ``sweep.sweep_grid``/``sweep_random``,
+``predictor.predict``, ``autotune.autotune``, ``validate.validate``) have
+completed their one-release deprecation cycle and are removed.
 
 This module imports NumPy only; jax loads lazily, on first use of the
 ``jax-jit`` backend, ``Design.from_kernel`` or ``Session.validate``.
@@ -58,7 +64,7 @@ from repro.hw import ClockDomain, DramOrganization, Hardware, MemorySystem
 
 TPU_V5E = hw.get("tpu_v5e").tpu_params()
 
-__version__ = "0.4.0"
+__version__ = "0.5.0"
 
 __all__ = [
     # the unified API

@@ -222,19 +222,30 @@ class Design:
 # Space: a declarative design space
 # ---------------------------------------------------------------------------
 
+#: Default streaming chunk: 64k points keeps the working set ~tens of MB
+#: while amortizing per-chunk dispatch, and is one fixed jit shape.
+DEFAULT_CHUNK = 1 << 16
+
+
 @dataclasses.dataclass(frozen=True)
 class Space:
     """A design space over the microbenchmark axes (``sweep.AXES``).
 
     ``Space.grid(**axes)`` is the full Cartesian product; ``Space.random(n,
-    seed=..., **axes)`` samples ``n`` points (2-tuples = inclusive integer
-    ranges).  Axes left unset default to the session's hardware and the
-    sweep-engine defaults at evaluation time.
+    seed=..., **axes)`` samples ``n`` points (2-tuples of numbers =
+    inclusive integer ranges).  Axes left unset default to the session's
+    hardware and the sweep-engine defaults at evaluation time.
+
+    ``Space.grid(...).stream()`` marks the space for bounded-memory
+    streaming evaluation: points are enumerated lazily from integer ids and
+    folded chunk-by-chunk into online reducers, so million-point grids
+    sweep in O(chunk + front + k) memory (see ``Session.sweep``).
     """
 
     axes: Mapping[str, Any]
     n: int | None = None       # None -> full grid
     seed: int = 0
+    chunk_size: int | None = None   # set by stream(); None -> materialize
 
     @classmethod
     def grid(cls, **axes) -> "Space":
@@ -249,6 +260,27 @@ class Space:
     @property
     def is_grid(self) -> bool:
         return self.n is None
+
+    def stream(self, chunk_size: int = DEFAULT_CHUNK) -> "Space":
+        """This grid, marked for chunked streaming evaluation.
+
+        Only grids stream: their points are pure index arithmetic on the
+        point id, so no per-point state ever needs materializing.  (A
+        random space would need all its draws held to be re-chunkable.)
+        """
+        if not self.is_grid:
+            raise TypeError("streaming sweeps need a grid space; "
+                            "Space.random materializes its draws")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        return dataclasses.replace(self, chunk_size=int(chunk_size))
+
+    def lists(self, *, dram: DramParams, bsp: BspParams) -> dict[str, list]:
+        """Normalized per-axis value lists, defaulting the hardware axes."""
+        axes = dict(self.axes)
+        axes.setdefault("dram", dram)
+        axes.setdefault("bsp", bsp)
+        return _sweep._normalize_axes(axes)
 
     def points(self, *, dram: DramParams, bsp: BspParams,
                ) -> tuple[dict[str, np.ndarray], int, dict]:
@@ -358,24 +390,120 @@ class Report:
 @dataclasses.dataclass(frozen=True)
 class SweepReport(_sweep.SweepResult, Report):
     """Scored design space (a :class:`~repro.core.sweep.SweepResult` that is
-    also a :class:`Report`), tagged with the backend that scored it."""
+    also a :class:`Report`), tagged with the backend that scored it.
+
+    A *streaming* sweep returns the same class backed by reducer state: the
+    held arrays (``points``/``estimate``/``resource``) cover only the
+    surviving points (Pareto front + top-k), ``point_ids`` maps them back
+    to global point ids, ``stats`` carries the exact whole-space summary,
+    and ``pareto()`` / ``top_k()`` / ``rows()`` answer from that state —
+    ``rows()`` is restricted to survivors by construction.
+    """
 
     backend: str = "numpy-batch"
+    # -- streaming state (None on a materialized sweep) --------------------
+    n_total: int | None = None        # points swept (held arrays are fewer)
+    stats: Mapping[str, Any] | None = None   # StatsReducer.summary()
+    point_ids: np.ndarray | None = None      # global id of each held row
+    front_idx: np.ndarray | None = None      # held-row indices of the front
+    front_objectives: tuple | None = None    # the reducer's objective names
+    topk_idx: np.ndarray | None = None       # held-row indices, best first
+    topk_key: str | None = None
+    reducers: tuple | None = None     # the folded reducer instances —
+    # custom Reducer subclasses read their accumulated state back here
     kind = "sweep"
+
+    @property
+    def is_streaming(self) -> bool:
+        return self.n_total is not None
+
+    @property
+    def n_points(self) -> int:
+        """Points swept (for a streaming report: the whole space, not the
+        survivors — ``len(report.resource)`` counts the held rows)."""
+        return self.n_total if self.n_total is not None \
+            else int(len(self.resource))
+
+    def pareto(self, objectives: Sequence[Any] | None = None) -> np.ndarray:
+        if self.is_streaming:
+            if self.front_idx is None:
+                raise ValueError(
+                    "a streaming report holds only the reducer's front; "
+                    "re-sweep with reducers=[ParetoReducer(objectives=...)]")
+            # A non-default reducer front must be requested explicitly, the
+            # same way top_k validates topk_key, so a custom-objective
+            # front is never mistaken for the default t_exe/resource one.
+            wanted = tuple(objectives) if objectives is not None \
+                else ("t_exe", "resource")
+            if wanted != self.front_objectives:
+                raise ValueError(
+                    f"streaming report holds the front over "
+                    f"{self.front_objectives}; re-sweep with "
+                    f"reducers=[ParetoReducer(objectives={wanted!r})] or "
+                    f"call pareto({list(self.front_objectives)!r})")
+            return np.asarray(self.front_idx, dtype=np.int64)
+        return super().pareto(objectives)
+
+    def top_k(self, k: int = 10, key: str = "t_exe") -> list[dict]:
+        if self.is_streaming:
+            if self.topk_idx is None or key != self.topk_key:
+                raise ValueError(
+                    f"streaming report kept top-k by {self.topk_key!r}; "
+                    f"re-sweep with reducers=[TopKReducer(k, {key!r})]")
+            # A reducer that kept the whole space answers any k, like the
+            # materialized path; only a truncated selection caps k.
+            if k > len(self.topk_idx) and len(self.topk_idx) < self.n_points:
+                raise ValueError(
+                    f"streaming report kept only the top {len(self.topk_idx)}"
+                    f"; re-sweep with reducers=[TopKReducer(k={k})]")
+            return self.rows(self.topk_idx[:k])
+        return super().top_k(k, key)
 
     def estimates(self, indices: Sequence[int] | None = None,
                   ) -> list[Estimate]:
-        """Per-point :class:`Estimate` objects (default: all points)."""
+        """Per-point :class:`Estimate` objects (default: all held points)."""
         if indices is None:
-            indices = range(self.n_points)
+            indices = range(len(self.resource))
         return [_estimate_row(self.estimate, int(i), backend=self.backend)
                 for i in indices]
 
     def best(self) -> Estimate:
-        """The fastest design point of the space."""
-        return self.estimates([int(np.argmin(self.t_exe))])[0]
+        """The fastest design point of the space.
+
+        For a streaming report this is cross-checked against the exact
+        whole-space minimum the stats reducer tracked: if the survivors the
+        configured reducers kept do not include that point (e.g. a custom
+        front with no ``t_exe`` objective and no top-k), this raises rather
+        than returning a confidently wrong row.  The default reducers
+        always keep it.
+        """
+        if self.is_streaming and len(self.resource) == 0:
+            raise ValueError(
+                "streaming report holds no survivor rows (stats-only "
+                f"reducers; t_exe_min={self.stats['t_exe_min']!r} at point "
+                f"id {self.stats['t_exe_min_id']}); re-sweep with "
+                "reducers=[TopKReducer(1), ...] to keep the best row")
+        i = int(np.argmin(self.t_exe))
+        if self.is_streaming and self.stats is not None \
+                and float(np.asarray(self.t_exe)[i]) != self.stats["t_exe_min"]:
+            raise ValueError(
+                "streaming report's survivors do not include the fastest "
+                f"point (held min {float(np.asarray(self.t_exe)[i])!r} vs "
+                f"whole-space min {self.stats['t_exe_min']!r} at point id "
+                f"{self.stats['t_exe_min_id']}); re-sweep with "
+                "reducers=[TopKReducer(1), ...] to keep it")
+        return self.estimates([i])[0]
 
     def summary(self) -> dict:
+        if self.is_streaming:
+            return {
+                "kind": self.kind, "backend": self.backend,
+                "n_points": int(self.stats["n_points"]),
+                "memory_bound_points": int(self.stats["memory_bound_points"]),
+                "pareto_points": int(len(self.front_idx)
+                                     if self.front_idx is not None else 0),
+                "t_exe_min_ms": float(self.stats["t_exe_min"]) * 1e3,
+            }
         return {
             "kind": self.kind, "backend": self.backend,
             "n_points": self.n_points,
@@ -383,6 +511,69 @@ class SweepReport(_sweep.SweepResult, Report):
             "pareto_points": int(len(self.pareto())),
             "t_exe_min_ms": float(np.min(self.t_exe)) * 1e3,
         }
+
+
+def _stream_report(outcome, tables: Mapping[str, list], *,
+                   backend: str) -> SweepReport:
+    """Fold a :class:`repro.core.stream.StreamOutcome` into a SweepReport.
+
+    Survivors = union of the Pareto reducer's front and the top-k rows,
+    deduplicated by point id and held in ascending id order; the front and
+    top-k index into those held rows.
+    """
+    from repro.core import stream as _stream
+
+    front = next((r for r in outcome.reducers
+                  if isinstance(r, _stream.ParetoReducer)), None)
+    topk = next((r for r in outcome.reducers
+                 if isinstance(r, _stream.TopKReducer)), None)
+    stats = next(r for r in outcome.reducers
+                 if isinstance(r, _stream.StatsReducer))
+
+    pieces = [r.cols for r in (front, topk)
+              if r is not None and r.cols is not None]
+    if pieces:
+        merged = {k: np.concatenate([p[k] for p in pieces])
+                  for k in pieces[0]}
+        ids, first = np.unique(np.asarray(merged["id"], dtype=np.int64),
+                               return_index=True)
+        merged = {k: np.asarray(v)[first] for k, v in merged.items()}
+    else:   # stats-only reducers: nothing held beyond the summary
+        ids = np.empty(0, dtype=np.int64)
+        merged = {k: np.empty(0) for k in
+                  (("id",) + _sweep.AXES + _stream.ESTIMATE_COLUMNS
+                   + ("resource",))}
+
+    points: dict[str, np.ndarray] = {}
+    for name in _sweep.AXES:
+        col = merged[name]
+        if name in _sweep._CATEGORICAL:
+            points[name] = _sweep._object_array(tables[name])[
+                np.asarray(col, dtype=np.int64)] if len(col) \
+                else _sweep._object_array([])
+        else:
+            points[name] = np.asarray(col)
+    est = _mb.BatchEstimate(
+        t_exe=np.asarray(merged["t_exe"], dtype=np.float64),
+        t_ideal=np.asarray(merged["t_ideal"], dtype=np.float64),
+        t_ovh=np.asarray(merged["t_ovh"], dtype=np.float64),
+        bound_ratio=np.asarray(merged["bound_ratio"], dtype=np.float64),
+        memory_bound=np.asarray(merged["memory_bound"], dtype=bool),
+        total_bytes=np.asarray(merged["total_bytes"], dtype=np.float64),
+        n_lsu=np.asarray(merged["n_lsu"], dtype=np.int64),
+        groups={})
+    return SweepReport(
+        points=points, estimate=est,
+        resource=np.asarray(merged["resource"], dtype=np.float64),
+        backend=backend, n_total=outcome.n_points, stats=stats.summary(),
+        point_ids=ids,
+        front_idx=(np.searchsorted(ids, front.ids)
+                   if front is not None else None),
+        front_objectives=front.objectives if front is not None else None,
+        topk_idx=(np.searchsorted(ids, topk.ids)
+                  if topk is not None else None),
+        topk_key=topk.key if topk is not None else None,
+        reducers=outcome.reducers)
 
 
 class AutotuneReport(Report):
@@ -615,12 +806,24 @@ class Session:
 
     # -- sweep --------------------------------------------------------------
 
-    def sweep(self, space: "Space | Mapping[str, Any] | None" = None,
-              **axes) -> SweepReport:
+    def sweep(self, space: "Space | Mapping[str, Any] | None" = None, *,
+              chunk_size: int | None = None, reducers=None,
+              workers: int | None = None, **axes) -> SweepReport:
         """Score a whole design space through this session's backend.
 
         Accepts a :class:`Space`, a plain axes mapping (treated as a grid),
         or keyword axes directly: ``sess.sweep(n_ga=[1, 2], simd=[4, 16])``.
+
+        Passing ``chunk_size`` (or a ``Space.grid(...).stream()`` space, or
+        explicit ``reducers``) switches to **bounded-memory streaming**:
+        points are enumerated lazily, evaluated in fixed-shape chunks (the
+        jax-jit estimator compiles exactly once per chunk shape and shards
+        chunks across local devices when there are several), and folded
+        into online reducers — by default a running Pareto front, a
+        ``top_k(10)`` selection and exact summary stats — so a 10M-point
+        grid sweeps in O(chunk + front + k) memory.  ``reducers`` takes
+        :mod:`repro.core.stream` reducer instances to change what is kept;
+        ``workers`` sizes the chunk thread pool on the numpy-batch backend.
         """
         if space is None:
             space = Space.grid(**axes)
@@ -629,6 +832,20 @@ class Session:
                             "not both")
         if isinstance(space, Mapping):
             space = Space.grid(**space)
+        chunk = chunk_size if chunk_size is not None else space.chunk_size
+        if chunk is None and (reducers is not None or workers is not None):
+            chunk = DEFAULT_CHUNK      # both options imply streaming
+        if workers is not None and workers > 1 \
+                and self.backend != "numpy-batch":
+            raise ValueError(
+                "workers applies to the numpy-batch backend only (jax-jit "
+                "shards chunks across devices; scalar is the reference "
+                "loop)")
+        if chunk is not None:
+            if not space.is_grid:
+                raise TypeError("streaming sweeps need a grid space; "
+                                "Space.random materializes its draws")
+            return self._sweep_stream(space, int(chunk), reducers, workers)
         points, n, cats = space.points(dram=self.dram, bsp=self.bsp)
         if self.backend == "scalar":
             result = self._sweep_scalar(points, n, cats)
@@ -658,8 +875,14 @@ class Session:
         Each point expands through ``apps.microbench`` (the proven-equal
         scalar path); the hardware axis and inert axes are resolved exactly
         like ``_build`` so the reported configurations match across
-        backends.
+        backends.  The readable per-point object columns the loop consumes
+        are gathered here from the coded ``cats`` — the scalar backend is
+        the only per-point-object consumer left.
         """
+        points = {name: (points[name] if name in points
+                         else _sweep._object_array(cats[name][0])[
+                             cats[name][1]])
+                  for name in _sweep.AXES}   # canonical column order
         points, hw_scale = _sweep._apply_hardware_axis(points, n)
         lsu_types = [points["lsu_type"][i] for i in range(n)]
         is_atomic = np.array([t is LsuType.ATOMIC_PIPELINED
@@ -703,6 +926,95 @@ class Session:
             n_lsu=n_lsu, groups={})
         return _sweep.SweepResult(points=points, estimate=est,
                                   resource=resource)
+
+    # -- streaming sweep ----------------------------------------------------
+
+    def _sweep_stream(self, space: "Space", chunk_size: int, reducers,
+                      workers: int | None) -> SweepReport:
+        """Chunked, reducer-folded evaluation of a grid space.
+
+        Peak memory is O(chunk + front + k): chunks are decoded from point
+        ids (integer codes only — no object arrays), scored through the
+        same ``_score`` core as the materialized path, calibrated exactly
+        like it, and folded into the reducers.  Survivor rows (front +
+        top-k) are the only points materialized into the report.
+        """
+        from repro.core import stream as _stream
+
+        import copy
+
+        lists = space.lists(dram=self.dram, bsp=self.bsp)
+        enum = _stream.GridEnumerator(lists)
+        n = enum.n
+        if reducers is None:
+            reducers = _stream.default_reducers()
+        else:
+            # Reducers accumulate state in place; folding a second sweep
+            # into instances that already hold the first one's points would
+            # silently mix the spaces, so each sweep folds into copies.
+            reducers = tuple(copy.deepcopy(r) for r in reducers)
+        if not any(isinstance(r, _stream.StatsReducer) for r in reducers):
+            reducers += (_stream.StatsReducer(),)
+
+        estimator = None
+        if self.backend == "jax-jit":
+            from repro import compat as _compat
+
+            ndev = _compat.local_device_count()
+            sharding = None
+            if ndev > 1:
+                # fixed shapes must tile the device mesh exactly
+                chunk_size = -(-chunk_size // ndev) * ndev
+                sharding = _compat.data_sharding(ndev)
+            estimator = (lambda b: _jax_estimate_batch(b, sharding=sharding))
+        elif self.backend == "numpy-batch":
+            estimator = _mb.estimate_batch
+            if workers is None:
+                import os
+
+                workers = min(4, os.cpu_count() or 1)
+        cat_names = [a for a in _sweep.AXES if a in _sweep._CATEGORICAL]
+        num_names = [a for a in _sweep.AXES if a not in _sweep._CATEGORICAL]
+        # The resolved categorical tables (dram/bsp extended with the
+        # hardware-axis views) depend only on the axis value lists, so the
+        # chunk-local codes index one table layout computed once up front.
+        probe = {k: (lists[k], np.zeros(1, dtype=np.int64))
+                 for k in cat_names}
+        tables = {k: v[0] for k, v in
+                  _sweep._resolve_hardware_codes(probe, 1)[0].items()}
+        c = self.calibration_factor
+
+        def eval_chunk(ids: np.ndarray) -> dict[str, np.ndarray]:
+            m = len(ids)
+            codes = enum.codes(ids)
+            numeric = {k: np.asarray(lists[k])[codes[k]] for k in num_names}
+            cats = {k: (lists[k], codes[k]) for k in cat_names}
+            if self.backend == "scalar":
+                result = self._sweep_scalar(dict(numeric), m, cats)
+                est, resource = result.estimate, result.resource
+                numeric = {k: result.points[k] for k in num_names}
+                cats, _, own = _sweep._resolve_hardware_codes(cats, m)
+            else:
+                est, resource, cats, numeric, own = _sweep._score(
+                    numeric, cats, m, estimator)
+            cols: dict[str, np.ndarray] = {"id": ids}
+            for k in num_names:
+                cols[k] = np.asarray(numeric[k])
+            for k in cat_names:
+                cols[k] = np.asarray(cats[k][1], dtype=np.int64)
+            scale = np.where(own, c, 1.0) if c != 1.0 else None
+            for name in _stream.ESTIMATE_COLUMNS:
+                v = np.asarray(getattr(est, name))
+                if scale is not None and name in ("t_exe", "t_ideal", "t_ovh"):
+                    v = v * scale       # session calibration, like sweep()
+                cols[name] = v
+            cols["resource"] = np.asarray(resource)
+            return cols
+
+        outcome = _stream.run_stream(
+            n, chunk_size, eval_chunk, reducers,
+            workers=workers if self.backend == "numpy-batch" else None)
+        return _stream_report(outcome, tables, backend=self.backend)
 
     # -- backend plumbing ---------------------------------------------------
 
@@ -777,9 +1089,18 @@ class Session:
 _JAX_FN = None
 
 
-def _jax_estimate_batch(batch: _mb.GroupBatch) -> _mb.BatchEstimate:
+def _jax_estimate_batch(batch: _mb.GroupBatch,
+                        sharding=None) -> _mb.BatchEstimate:
     """The array core under ``jax.jit`` with x64 — numerically equal to the
-    NumPy path (same ops, same dtype), returned as NumPy arrays."""
+    NumPy path (same ops, same dtype), returned as NumPy arrays.
+
+    ``sharding`` (a ``NamedSharding`` from :func:`repro.compat.data_sharding`)
+    splits every batch array's leading (group) axis across local devices;
+    the jit-compiled core then runs SPMD with XLA inserting the one
+    cross-device reduction the per-kernel segment sums need.  The function
+    is compiled once per input shape, so fixed-shape streaming chunks reuse
+    a single executable for the whole sweep.
+    """
     global _JAX_FN
     import jax
     import jax.numpy as jnp
@@ -800,6 +1121,8 @@ def _jax_estimate_batch(batch: _mb.GroupBatch) -> _mb.BatchEstimate:
             f.name: (batch.n_kernels if f.name == "n_kernels"
                      else jnp.asarray(getattr(batch, f.name)))
             for f in dataclasses.fields(_mb.GroupBatch)})
+        if sharding is not None:
+            jb = jax.device_put(jb, sharding)
         out = jax.tree_util.tree_map(np.asarray, _JAX_FN(jb))
     groups = out.pop("groups")
     return _mb.BatchEstimate(**out, groups=groups)

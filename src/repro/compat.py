@@ -19,6 +19,10 @@ snippets all import the *same* resolution instead of scattering per-file
   the identity).
 * ``default_interpret(flag)`` — one place deciding when Pallas kernels run
   in interpret mode (everywhere except a real TPU backend).
+* ``local_device_count()`` / ``data_sharding(n)`` — device discovery and a
+  1-D leading-axis ``NamedSharding`` (built through ``make_mesh`` so the
+  AxisType drift stays here); the streaming sweep engine shards each
+  fixed-shape chunk batch with it.
 
 The module imports jax but never touches device state at import time, so it
 is safe to import before ``XLA_FLAGS`` tricks (dry-run, subprocess tests).
@@ -106,6 +110,34 @@ def make_mesh(shape, axes, *, explicit: bool = False):
         kind = AxisType.Explicit if explicit else AxisType.Auto
         return jax.make_mesh(shape, axes, axis_types=(kind,) * len(axes))
     return jax.make_mesh(shape, axes)
+
+
+def local_device_count(backend: str | None = None) -> int:
+    """Visible local device count; 1 when the backend cannot initialize.
+
+    The streaming sweep engine uses this to decide whether chunks are worth
+    sharding — a RuntimeError (e.g. a TPU backend requested on a CPU host)
+    must degrade to single-device, not crash a sweep.
+    """
+    try:
+        return jax.local_device_count(backend)
+    except RuntimeError:
+        return 1
+
+
+def data_sharding(n: int | None = None):
+    """``NamedSharding`` splitting a leading axis across ``n`` local devices.
+
+    Built on a 1-D ``("data",)`` mesh through :func:`make_mesh`, so the
+    AxisType drift is handled in one place.  This is the sharding the
+    streaming sweep applies to each fixed-shape chunk batch (the leading
+    axis is the LSU-group dimension, ``2 * chunk_size`` entries).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    n = int(n if n is not None else local_device_count())
+    mesh = make_mesh((n,), ("data",))
+    return NamedSharding(mesh, PartitionSpec("data"))
 
 
 # ---------------------------------------------------------------------------

@@ -2,8 +2,10 @@
 
 The *public* surface is :mod:`repro.api` (``Design`` / ``Session`` /
 ``Space`` and the shared ``Estimate``/``Report`` family); the modules below
-implement it.  The pre-PR-3 entry points re-exported here (``estimate``,
-``sweep_grid``, ``sweep_random``) are deprecated shims kept for one release.
+implement it.  The pre-PR-3 module-level entry points (``model.estimate``,
+``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
+``autotune.autotune``, ``validate.validate``) were deprecation shims for
+one release and are now removed — route everything through ``Session``.
 
 Hardware values live in the registry-backed spec layer (:mod:`repro.hw`);
 the constants re-exported below are its legacy parameter views.
@@ -14,6 +16,8 @@ Faithful FPGA/HLS layer (paper Eqs. 1-10):
     model       -- T_exe estimation + memory-bound criterion (scalar core)
     model_batch -- array-based core of the same equations (vectorized)
     sweep       -- design-space sweeps: grid/random scoring + Pareto fronts
+    stream      -- bounded-memory streaming sweeps: lazy grid enumeration,
+                   chunked evaluation, online Pareto/top-k/stats reducers
     dramsim     -- event-driven DRAM oracle (board substitute)
     baselines   -- Wang [6] / HLScope+ [7] comparison models
     apps        -- Table IV applications + SIV microbenchmarks
@@ -30,9 +34,9 @@ TPU/XLA adaptation layer (DESIGN.md S2):
 
 from repro.core.fpga import BspParams, DramParams
 from repro.core.lsu import Lsu, LsuType, make_global_access
-from repro.core.model import KernelEstimate, estimate, memory_bound_ratio
+from repro.core.model import KernelEstimate, memory_bound_ratio
 from repro.core.model_batch import BatchEstimate, GroupBatch, estimate_batch
-from repro.core.sweep import SweepResult, pareto_front, sweep_grid, sweep_random
+from repro.core.sweep import SweepResult, pareto_front
 from repro.hw import get as _hw_get
 
 # Registry-backed convenience re-exports of the former module constants

@@ -360,16 +360,3 @@ def _autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
                     cached=bool(records[i].get("cached")))
         for i in scores["order"]
     ], failures)
-
-
-def autotune(cfg, shape, mesh, candidates: Iterable[Candidate] | None = None,
-             hw: TpuParams | None = None, *,
-             cache: HloAnalysisCache | bool | None = True,
-             gather_row_bytes: float = 512.0) -> AutotuneResults:
-    """Deprecated: use ``repro.Session(hw=...).autotune(cfg, shape, mesh)``."""
-    from repro.deprecation import warn_deprecated
-
-    warn_deprecated("repro.core.autotune.autotune()",
-                    "repro.Session(hw=...).autotune(cfg, shape, mesh, ...)")
-    return _autotune(cfg, shape, mesh, candidates, hw, cache=cache,
-                     gather_row_bytes=gather_row_bytes)

@@ -236,21 +236,6 @@ def _estimate(
     )
 
 
-def estimate(
-    lsus: Sequence[Lsu],
-    dram: DramParams,
-    bsp: BspParams | None = None,
-    *,
-    f: int = 1,
-) -> KernelEstimate:
-    """Deprecated: use ``repro.Session(...).estimate(repro.Design(lsus))``."""
-    from repro.deprecation import warn_deprecated
-
-    warn_deprecated("repro.core.model.estimate()",
-                    "repro.Session(...).estimate(repro.Design(...))")
-    return _estimate(lsus, dram, bsp, f=f)
-
-
 def pipeline_time(
     n_work_items: int,
     *,

@@ -115,16 +115,3 @@ def predict_step(
     )
 
 
-def predict(
-    hlo_text: str,
-    cost: dict | None = None,
-    hw: TpuParams | None = None,
-    *,
-    gather_row_bytes: float = 512.0,
-) -> StepPrediction:
-    """Deprecated: use ``repro.Session(hw=...).predict(hlo_text, cost)``."""
-    from repro.deprecation import warn_deprecated
-
-    warn_deprecated("repro.core.predictor.predict()",
-                    "repro.Session(hw=...).predict(hlo_text, cost)")
-    return predict_step(hlo_text, cost, hw, gather_row_bytes=gather_row_bytes)

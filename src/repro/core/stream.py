@@ -1,0 +1,291 @@
+"""Bounded-memory streaming evaluation of huge design spaces.
+
+The sweep engine's materialized path (:func:`repro.core.sweep._build`) holds
+every point, estimate and resource value in memory before any selection
+runs, so a 10M-point sweep is memory-prohibitive by construction.  This
+module supplies the streaming counterpart:
+
+* :class:`GridEnumerator` — a lazy Cartesian-product enumerator.  A design
+  point is a single integer id in ``[0, n)``; per-axis indices come out of
+  mixed-radix arithmetic (``(ids // stride) % size``), bit-identical to the
+  order ``np.meshgrid(..., indexing="ij")`` used to materialize, with no
+  O(n) allocation anywhere.
+* **Online reducers** — :class:`ParetoReducer`, :class:`TopKReducer` and
+  :class:`StatsReducer` fold one scored chunk at a time into a running
+  Pareto front, a bounded best-``k`` selection and exact summary stats, so
+  peak memory is O(chunk + front + k) regardless of sweep size (times the
+  worker count when the thread-pool path holds several chunks in flight).
+* :func:`run_stream` — the chunk loop: fixed-shape chunks (the last one
+  padded so a jit-compiled estimator compiles exactly once per chunk
+  shape), masked before folding, optionally pipelined through a thread
+  pool for the numpy backend.
+
+A *chunk-column* dict is the currency between the evaluator and the
+reducers: ``id`` (global point ids), the normalized numeric axis values,
+integer codes for the categorical axes, the per-point estimate fields
+(``t_exe``, ``t_ideal``, ``t_ovh``, ``bound_ratio``, ``memory_bound``,
+``total_bytes``, ``n_lsu``) and ``resource``.  Every column is a plain
+1-D array of the chunk length — no object dtype on the hot path.
+
+The folded result is order- and chunk-size-invariant for the Pareto front
+and bit-equal to the materialized path for front membership, top-k rows
+and summary stats (tests/test_stream.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+#: Estimate columns every evaluator must provide per chunk.
+ESTIMATE_COLUMNS = ("t_exe", "t_ideal", "t_ovh", "bound_ratio",
+                    "memory_bound", "total_bytes", "n_lsu")
+
+
+class GridEnumerator:
+    """Lazy mixed-radix view of the Cartesian product of normalized axes.
+
+    ``lists`` maps axis name -> list of values (the output of
+    ``sweep._normalize_axes``).  Point ids count through the product in C
+    order (first axis slowest), exactly matching the materialized
+    ``_grid_points`` layout, so point ``i`` here is point ``i`` there.
+    """
+
+    def __init__(self, lists: Mapping[str, Sequence]):
+        self.lists = {k: list(v) for k, v in lists.items()}
+        self.names = list(self.lists)
+        self.sizes = np.asarray([len(v) for v in self.lists.values()],
+                                dtype=np.int64)
+        if np.any(self.sizes == 0):
+            raise ValueError("empty sweep: every axis needs at least one value")
+        # stride of axis i = product of the sizes of all later axes
+        strides = np.ones(len(self.sizes), dtype=np.int64)
+        for i in range(len(self.sizes) - 2, -1, -1):
+            strides[i] = strides[i + 1] * self.sizes[i + 1]
+        self.strides = strides
+        self.n = int(self.sizes.prod()) if len(self.sizes) else 0
+
+    def codes(self, ids: np.ndarray) -> dict[str, np.ndarray]:
+        """Per-axis index arrays for the given point ids (no materialization)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        return {name: (ids // self.strides[i]) % self.sizes[i]
+                for i, name in enumerate(self.names)}
+
+
+def _concat(held: dict[str, np.ndarray] | None,
+            cols: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+    if held is None:
+        return {k: np.asarray(v) for k, v in cols.items()}
+    return {k: np.concatenate([held[k], np.asarray(cols[k])]) for k in held}
+
+
+def _take(cols: Mapping[str, np.ndarray], idx) -> dict[str, np.ndarray]:
+    return {k: np.asarray(v)[idx] for k, v in cols.items()}
+
+
+class Reducer:
+    """Protocol of an online reducer: fold chunk columns, read state back."""
+
+    def update(self, cols: Mapping[str, np.ndarray]) -> None:
+        raise NotImplementedError
+
+
+class StatsReducer(Reducer):
+    """Exact running summary: counts, min (earliest id on ties), sums.
+
+    ``n_points``, ``memory_bound`` and ``t_exe_min`` are bit-equal to their
+    materialized counterparts under any chunking; the sums accumulate one
+    float64 partial per chunk (agreement ~1e-12 relative).
+    """
+
+    def __init__(self):
+        self.n_points = 0
+        self.memory_bound = 0
+        self.t_exe_min = math.inf
+        self.t_exe_min_id = -1
+        self.t_exe_sum = 0.0
+        self.total_bytes_sum = 0.0
+
+    def update(self, cols: Mapping[str, np.ndarray]) -> None:
+        t = np.asarray(cols["t_exe"])
+        if not len(t):
+            return
+        self.n_points += len(t)
+        self.memory_bound += int(np.asarray(cols["memory_bound"]).sum())
+        self.t_exe_sum += float(t.sum())
+        self.total_bytes_sum += float(np.asarray(cols["total_bytes"]).sum())
+        i = int(np.argmin(t))                  # first occurrence on ties
+        if float(t[i]) < self.t_exe_min:       # strict: keep the earliest id
+            self.t_exe_min = float(t[i])
+            self.t_exe_min_id = int(np.asarray(cols["id"])[i])
+
+    def summary(self) -> dict:
+        return {
+            "n_points": self.n_points,
+            "memory_bound_points": self.memory_bound,
+            "t_exe_min": self.t_exe_min,
+            "t_exe_min_id": self.t_exe_min_id,
+            "t_exe_sum": self.t_exe_sum,
+            "total_bytes_sum": self.total_bytes_sum,
+        }
+
+
+class TopKReducer(Reducer):
+    """Bounded best-``k`` selection by one column (ascending).
+
+    Each fold concatenates the held rows with the chunk, cuts to the ``k``
+    smallest with ``np.argpartition`` and breaks value ties by point id, so
+    the surviving rows are exactly the first ``k`` of a stable argsort over
+    the whole space — bit-equal to the materialized ``top_k``.
+    """
+
+    def __init__(self, k: int = 10, key: str = "t_exe"):
+        if k < 1:
+            raise ValueError("top-k needs k >= 1")
+        self.k = int(k)
+        self.key = key
+        self.cols: dict[str, np.ndarray] | None = None
+
+    def update(self, cols: Mapping[str, np.ndarray]) -> None:
+        merged = _concat(self.cols, cols)
+        vals = np.asarray(merged[self.key], dtype=np.float64)
+        if len(vals) > self.k:
+            # argpartition bounds the exact-order work to the candidate set:
+            # everything at or below the k-th value competes, then value
+            # ties are broken by id (== original position, since ids only
+            # grow across folds) to match a stable full argsort.
+            part = np.argpartition(vals, self.k - 1)[:self.k]
+            cutoff = float(vals[part].max())
+            cand = np.flatnonzero(vals <= cutoff)
+            order = cand[np.lexsort((merged["id"][cand], vals[cand]))][:self.k]
+        else:
+            order = np.lexsort((merged["id"], vals))
+        self.cols = _take(merged, order)       # kept in rank order
+
+    @property
+    def ids(self) -> np.ndarray:
+        """Selected point ids, best first."""
+        return (np.empty(0, dtype=np.int64) if self.cols is None
+                else np.asarray(self.cols["id"], dtype=np.int64))
+
+
+class ParetoReducer(Reducer):
+    """Running Pareto front over the given objective columns (minimized).
+
+    Folding is just ``pareto_front`` over (held front + chunk); because
+    every globally non-dominated point survives any partial fold and every
+    dominated point is dominated by some front member, the final front is
+    invariant to chunk size and chunk order (tests/test_stream.py property).
+    Memory is O(front).
+    """
+
+    def __init__(self, objectives: Sequence[str] = ("t_exe", "resource")):
+        if not objectives:
+            raise ValueError("pareto needs at least one objective column")
+        self.objectives = tuple(objectives)
+        self.cols: dict[str, np.ndarray] | None = None
+
+    def update(self, cols: Mapping[str, np.ndarray]) -> None:
+        from repro.core.sweep import pareto_front
+
+        merged = _concat(self.cols, cols)
+        vals = np.stack([np.asarray(merged[o], dtype=np.float64)
+                         for o in self.objectives], axis=1)
+        self.cols = _take(merged, pareto_front(vals))
+
+    @property
+    def ids(self) -> np.ndarray:
+        """Front point ids, ascending."""
+        if self.cols is None:
+            return np.empty(0, dtype=np.int64)
+        return np.sort(np.asarray(self.cols["id"], dtype=np.int64))
+
+
+def default_reducers(k: int = 10) -> tuple[Reducer, ...]:
+    """The reducer set ``Session.sweep`` streams into unless told otherwise."""
+    return (ParetoReducer(), TopKReducer(k), StatsReducer())
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamOutcome:
+    """What ``run_stream`` hands back: the folded reducers + loop telemetry."""
+
+    reducers: tuple[Reducer, ...]
+    n_points: int
+    n_chunks: int
+    chunk_size: int
+
+
+def run_stream(
+    n: int,
+    chunk_size: int,
+    eval_chunk: Callable[[np.ndarray], Mapping[str, np.ndarray]],
+    reducers: Iterable[Reducer],
+    *,
+    workers: int | None = None,
+    chunk_order: Sequence[int] | None = None,
+) -> StreamOutcome:
+    """Drive ``eval_chunk`` over ``n`` points in fixed-shape chunks.
+
+    ``eval_chunk(ids)`` always receives exactly ``chunk_size`` ids — the
+    last chunk is padded by repeating its final valid id, so a jit-compiled
+    evaluator sees one shape only and compiles exactly once.  The padded
+    tail is sliced off every returned column before the reducers fold it.
+
+    ``workers > 1`` evaluates chunks through a thread pool while folding
+    strictly in submission order, so results are identical to the serial
+    loop (the reducers themselves are order-invariant for the Pareto front,
+    but top-k tie-breaking and stats argmins rely on ascending ids).
+
+    ``chunk_order`` permutes which chunk is evaluated when (testing hook
+    for the order-invariance property); folding follows that order.
+    """
+    if chunk_size < 1:
+        raise ValueError("chunk_size must be >= 1")
+    reducers = tuple(reducers)
+    starts = list(range(0, n, chunk_size))
+    if chunk_order is not None:
+        starts = [starts[i] for i in chunk_order]
+
+    def ids_for(start: int) -> tuple[np.ndarray, int]:
+        stop = min(start + chunk_size, n)
+        ids = np.arange(start, stop, dtype=np.int64)
+        if len(ids) < chunk_size:
+            ids = np.concatenate(
+                [ids, np.full(chunk_size - len(ids), ids[-1], dtype=np.int64)])
+        return ids, stop - start
+
+    def fold(cols: Mapping[str, np.ndarray], valid: int) -> None:
+        if valid != chunk_size:
+            cols = {k: np.asarray(v)[:valid] for k, v in cols.items()}
+        for r in reducers:
+            r.update(cols)
+
+    if workers and workers > 1 and len(starts) > 1:
+        from collections import deque
+        from concurrent.futures import ThreadPoolExecutor
+
+        w = int(workers)
+        with ThreadPoolExecutor(max_workers=w) as ex:
+            # At most w+1 chunks exist at once (in flight or awaiting their
+            # in-order fold), so the threaded path's peak memory is
+            # O(workers * chunk + front + k), not unbounded.
+            pending: deque = deque()
+            for s in starts:
+                ids, valid = ids_for(s)
+                pending.append((ex.submit(eval_chunk, ids), valid))
+                if len(pending) > w:          # fold in submission order
+                    fut, v = pending.popleft()
+                    fold(fut.result(), v)
+            while pending:
+                fut, v = pending.popleft()
+                fold(fut.result(), v)
+    else:
+        for s in starts:
+            ids, valid = ids_for(s)
+            fold(eval_chunk(ids), valid)
+
+    return StreamOutcome(reducers=reducers, n_points=n,
+                         n_chunks=len(starts), chunk_size=chunk_size)

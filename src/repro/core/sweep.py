@@ -18,22 +18,29 @@ The public entry points are :class:`repro.Space` and
     >>> best = res.top_k(5)
     >>> front = res.pareto()          # time vs interconnect-width cost
 
-``sweep_grid``/``sweep_random`` below are deprecated aliases of that path,
-kept for one release.  Every design point maps to exactly the LSU list
-`apps.microbench` would build, so batched results match the scalar
-estimate path element-wise (tested to rtol 1e-6 in tests/test_sweep.py).
+Design points are described by integer codes end-to-end: every categorical
+axis (LSU type, DRAM part, BSP variant, hardware spec) is factorized once
+into a ``(table, codes)`` pair and per-point values are table gathers, so
+the hot path never touches an object-dtype array.  The same scoring core
+(:func:`_score`) backs both the materialized path below and the
+bounded-memory streaming path (:mod:`repro.core.stream` +
+``Space.grid(...).stream()``), which is how million-point spaces are swept.
+
+Every design point maps to exactly the LSU list `apps.microbench` would
+build, so batched results match the scalar estimate path element-wise
+(tested to rtol 1e-6 in tests/test_sweep.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import numbers
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
 from repro.core import model_batch as _mb
-from repro.core.fpga import BspParams, DramParams
+from repro.core.fpga import BspParams
 from repro.core.lsu import LsuType
-from repro.deprecation import warn_deprecated
 
 #: Sweepable axes, in canonical order.  ``lsu_type``/``dram``/``bsp``/
 #: ``hardware`` are categorical; the rest are numeric.  A ``hardware`` axis
@@ -44,6 +51,7 @@ AXES = ("lsu_type", "n_ga", "simd", "n_elems", "delta", "elem_bytes",
         "include_write", "val_constant", "dram", "bsp", "hardware")
 
 _CATEGORICAL = {"lsu_type", "dram", "bsp", "hardware"}
+_NUMERIC = tuple(a for a in AXES if a not in _CATEGORICAL)
 
 
 def _as_list(v) -> list:
@@ -54,26 +62,28 @@ def _as_list(v) -> list:
     return [v]
 
 
-def pareto_front(values: np.ndarray) -> np.ndarray:
-    """Indices of the Pareto-minimal rows of ``values`` [N, d].
+def _object_array(values) -> np.ndarray:
+    """1-D object array from a list (safe for dataclass/None elements)."""
+    arr = np.empty(len(values), dtype=object)
+    arr[:] = list(values)
+    return arr
 
-    A row dominates another if it is <= in every objective and < in at least
-    one.  Duplicated non-dominated rows are all kept.  The returned indices
-    are sorted ascending, and the *set* of selected points is invariant under
-    any permutation of the input rows.
+
+def _pareto_scan(vals: np.ndarray) -> np.ndarray:
+    """Reference O(N·F) front: lexsort + per-candidate scan (any dimension).
+
+    This was the only implementation before the streaming engine landed;
+    it is kept both as the d != 2 fallback and as the measured baseline of
+    ``benchmarks/sweep_bench.py`` (the "materialize everything, then scan"
+    legacy cost).
     """
-    vals = np.asarray(values, dtype=np.float64)
-    if vals.ndim == 1:
-        vals = vals[:, None]
     n = len(vals)
-    if n == 0:
-        return np.empty(0, dtype=np.int64)
     # Lexicographic order makes any dominator of row i appear before i, so a
     # single forward scan against the kept front is complete.
     order = np.lexsort(tuple(vals[:, d] for d in range(vals.shape[1] - 1, -1, -1)))
     # The front lives in a preallocated [n, d] buffer filled left to right;
     # each candidate is checked against the fv[:m] *view*, so keeping a point
-    # is O(F) instead of the former copy-the-front-per-point O(F^2).
+    # is O(F) instead of a copy-the-front-per-point O(F^2).
     fv = np.empty_like(vals)
     m = 0
     keep: list[int] = []
@@ -87,6 +97,53 @@ def pareto_front(values: np.ndarray) -> np.ndarray:
         m += 1
         keep.append(int(idx))
     return np.asarray(sorted(keep), dtype=np.int64)
+
+
+def _pareto_2d(vals: np.ndarray) -> np.ndarray:
+    """Fully vectorized 2-objective front, O(N log N), no Python loop.
+
+    Sort by (v0, v1); a row is dominated iff some row in a strictly
+    smaller v0 group has v1 <= its own (strict v0 makes the domination
+    strict), or a row in its *own* v0 group has strictly smaller v1.
+    Duplicated non-dominated rows all survive, exactly like the scan.
+    """
+    n = len(vals)
+    order = np.lexsort((vals[:, 1], vals[:, 0]))
+    v0 = vals[order, 0]
+    v1 = vals[order, 1]
+    new_group = np.empty(n, dtype=bool)
+    new_group[0] = True
+    new_group[1:] = v0[1:] != v0[:-1]
+    start = np.maximum.accumulate(np.where(new_group, np.arange(n), 0))
+    gmin = v1[start]                       # group min (v1 ascending in group)
+    cm = np.minimum.accumulate(v1)         # min v1 over all earlier rows
+    prev_end = start - 1                   # last row of the previous group
+    m_strict = np.where(prev_end >= 0, cm[np.maximum(prev_end, 0)], np.inf)
+    dominated = (m_strict <= v1) | (gmin < v1)
+    return np.sort(order[~dominated]).astype(np.int64)
+
+
+def pareto_front(values: np.ndarray) -> np.ndarray:
+    """Indices of the Pareto-minimal rows of ``values`` [N, d].
+
+    A row dominates another if it is <= in every objective and < in at least
+    one.  Duplicated non-dominated rows are all kept.  The returned indices
+    are sorted ascending, and the *set* of selected points is invariant under
+    any permutation of the input rows.
+
+    The 2-objective case (the default time-vs-resource trade-off) runs a
+    fully vectorized O(N log N) pass — this is what lets the streaming
+    reducers fold million-point sweeps without a per-point Python loop;
+    higher dimensions fall back to the lexsort + scan reference.
+    """
+    vals = np.asarray(values, dtype=np.float64)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    if len(vals) == 0:
+        return np.empty(0, dtype=np.int64)
+    if vals.shape[1] == 2:
+        return _pareto_2d(vals)
+    return _pareto_scan(vals)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,11 +205,11 @@ class SweepResult:
         return self.rows(idx)
 
     def rows(self, indices: Sequence[int] | None = None) -> list[dict]:
-        """CSV-ready dict rows for the selected (default: all) points."""
+        """CSV-ready dict rows for the selected (default: all held) points."""
         est = self.estimate
         ebw = self.effective_bandwidth
         if indices is None:
-            indices = range(self.n_points)
+            indices = range(len(self.resource))
         out = []
         for i in indices:
             i = int(i)
@@ -201,6 +258,28 @@ def _factorize(objs) -> tuple[list, np.ndarray]:
     return table, codes
 
 
+def _hardware_views(table: Sequence) -> tuple[list, list, np.ndarray, np.ndarray]:
+    """Per-unique-spec (dram view, bsp view, host factor, is-None mask).
+
+    Views are constructed once per unique spec — the dedup contract the old
+    per-point loop kept via identity caching, now explicit in the table.
+    ``None`` entries get placeholder views that are never gathered.
+    """
+    drams, bsps, hf, is_none = [], [], [], []
+    for h in table:
+        if h is None:
+            drams.append(None)
+            bsps.append(None)
+            hf.append(1.0)
+            is_none.append(True)
+        else:
+            drams.append(h.dram_params())
+            bsps.append(h.bsp_params())
+            hf.append(float(h.host_factor))
+            is_none.append(False)
+    return drams, bsps, np.asarray(hf), np.asarray(is_none, dtype=bool)
+
+
 def _apply_hardware_axis(points: dict[str, np.ndarray], n: int,
                          ) -> tuple[dict[str, np.ndarray], np.ndarray]:
     """Resolve the ``hardware`` axis into effective dram/bsp columns.
@@ -208,27 +287,50 @@ def _apply_hardware_axis(points: dict[str, np.ndarray], n: int,
     Points whose hardware spec is not ``None`` get that spec's DRAM/BSP
     views in their ``dram``/``bsp`` columns (so reported configurations
     describe what was actually scored) and its persisted ``host_factor`` in
-    the returned per-point scale array.  Views are constructed once per
-    unique spec, so downstream ``_factorize`` dedup still works.  Shared by
-    ``_build`` and the scalar Session backend — the two paths must resolve
-    identically for backend equivalence to hold.
+    the returned per-point scale array.  Fully vectorized: the hardware
+    column is factorized once and the views are table gathers — no
+    per-point Python loop.  Used by the scalar Session backend (the coded
+    batched path resolves through :func:`_resolve_hardware_codes`); the two
+    paths must resolve identically for backend equivalence to hold.
     """
     hw_col = points.get("hardware")
     scale = np.ones(n)
     if hw_col is None or all(h is None for h in hw_col):
         return points, scale
-    views: dict[int, tuple] = {}
-    dram_col = np.asarray(points["dram"], dtype=object).copy()
-    bsp_col = np.asarray(points["bsp"], dtype=object).copy()
-    for i, h in enumerate(hw_col):
-        if h is None:
-            continue
-        v = views.get(id(h))
-        if v is None:
-            v = views[id(h)] = (h.dram_params(), h.bsp_params(),
-                                float(h.host_factor))
-        dram_col[i], bsp_col[i], scale[i] = v
+    table, codes = _factorize(hw_col)
+    drams, bsps, hf, is_none = _hardware_views(table)
+    own = is_none[codes]
+    scale = np.where(own, 1.0, hf[codes])
+    dram_col = np.where(own, np.asarray(points["dram"], dtype=object),
+                        _object_array(drams)[codes])
+    bsp_col = np.where(own, np.asarray(points["bsp"], dtype=object),
+                       _object_array(bsps)[codes])
     return {**points, "dram": dram_col, "bsp": bsp_col}, scale
+
+
+def _resolve_hardware_codes(cats: dict[str, tuple[list, np.ndarray]], n: int,
+                            ) -> tuple[dict, np.ndarray, np.ndarray]:
+    """Coded counterpart of :func:`_apply_hardware_axis`.
+
+    Rewrites the ``dram``/``bsp`` ``(table, codes)`` pairs so points with a
+    hardware spec index that spec's views (appended to the tables), and
+    returns ``(cats, host-factor scale [n], own mask [n])`` where ``own``
+    marks points running on the session's own hardware (spec is ``None``).
+    No object-dtype column is ever built.
+    """
+    hw_table, hw_codes = cats["hardware"]
+    if all(h is None for h in hw_table):
+        return cats, np.ones(n), np.ones(n, dtype=bool)
+    drams, bsps, hf, is_none = _hardware_views(hw_table)
+    own = is_none[np.asarray(hw_codes)]
+    scale = np.where(own, 1.0, hf[hw_codes])
+    d_table, d_codes = cats["dram"]
+    b_table, b_codes = cats["bsp"]
+    new_d = (list(d_table) + drams,
+             np.where(own, d_codes, len(d_table) + np.asarray(hw_codes)))
+    new_b = (list(b_table) + bsps,
+             np.where(own, b_codes, len(b_table) + np.asarray(hw_codes)))
+    return {**cats, "dram": new_d, "bsp": new_b}, scale, own
 
 
 def _normalize_inert_axes(points: dict[str, np.ndarray],
@@ -240,7 +342,7 @@ def _normalize_inert_axes(points: dict[str, np.ndarray],
     ``include_write`` for atomics (the atomic *is* the write), so reported
     configs describe exactly what was scored; grid products over inert axes
     thus show up as *visibly* identical rows rather than phantom distinct
-    designs.  Shared by ``_build`` and the scalar Session backend — the two
+    designs.  Shared by ``_score`` and the scalar Session backend — the two
     paths must normalize identically for backend equivalence to hold.
     """
     delta = np.where(is_atomic | is_ack, 1,
@@ -252,13 +354,17 @@ def _normalize_inert_axes(points: dict[str, np.ndarray],
             "include_write": include_write}
 
 
-def _build(points: dict[str, np.ndarray], n: int,
-           cats: dict[str, tuple[list, np.ndarray]] | None = None,
+def _score(numeric: dict[str, np.ndarray],
+           cats: dict[str, tuple[list, np.ndarray]], n: int,
            estimator: Callable[[_mb.GroupBatch], _mb.BatchEstimate] | None = None,
-           ) -> SweepResult:
-    """Score ``n`` design points described by per-point axis arrays.
+           ) -> tuple[_mb.BatchEstimate, np.ndarray, dict, dict, np.ndarray]:
+    """Score ``n`` design points given numeric columns + coded categoricals.
 
-    ``estimator`` maps the assembled :class:`model_batch.GroupBatch` to a
+    This is the shared core of the materialized (:func:`_build`) and
+    streaming (``Session.sweep(chunk_size=...)``) paths: per-point numeric
+    arrays for the numeric axes, ``(table, codes)`` pairs for every
+    categorical axis, no object arrays anywhere.  ``estimator`` maps the
+    assembled :class:`model_batch.GroupBatch` to a
     :class:`model_batch.BatchEstimate`; it defaults to the NumPy array core
     and is how ``Session`` backends (jax-jit) plug into the same expansion.
 
@@ -270,35 +376,24 @@ def _build(points: dict[str, np.ndarray], n: int,
     * write-ACK: a group of ``n_ga`` aligned reads plus a group of ``simd``
       scalar ACK stores (the compiler replicates the store LSU);
     * atomic: a group of ``n_ga`` atomic units (stride is always 1).
+
+    Returns ``(estimate, resource, resolved cats, normalized numeric,
+    own-hardware mask)``.
     """
-    cats = cats or {}
-    points, hw_scale = _apply_hardware_axis(points, n)
-    if np.any(hw_scale != 1.0) or (points.get("hardware") is not None
-                                   and any(h is not None
-                                           for h in points["hardware"])):
-        # dram/bsp columns were rewritten per point; the precomputed
-        # factorizations no longer describe them.
-        cats = {k: v for k, v in cats.items() if k not in ("dram", "bsp")}
+    cats, hw_scale, own = _resolve_hardware_codes(cats, n)
 
-    def _cat(name):
-        if name in cats:
-            return cats[name]
-        return _factorize(points[name])
-
-    type_table, type_idx = _cat("lsu_type")
+    type_table, type_idx = cats["lsu_type"]
     type_codes = np.asarray([_mb.TYPE_CODE[t] for t in type_table],
                             dtype=np.int64)[type_idx]
-    n_ga = np.asarray(points["n_ga"], dtype=np.int64)
-    simd = np.asarray(points["simd"], dtype=np.int64)
-    n_elems = np.asarray(points["n_elems"], dtype=np.int64)
-    delta = np.asarray(points["delta"], dtype=np.int64)
-    elem_bytes = np.asarray(points["elem_bytes"], dtype=np.int64)
-    include_write = np.asarray(points["include_write"], dtype=bool)
-    val_constant = np.asarray(points["val_constant"], dtype=bool)
-    dram_table, dram_idx = _cat("dram")
-    bsp_table, bsp_idx = _cat("bsp")
+    n_ga = np.asarray(numeric["n_ga"], dtype=np.int64)
+    simd = np.asarray(numeric["simd"], dtype=np.int64)
+    n_elems = np.asarray(numeric["n_elems"], dtype=np.int64)
+    elem_bytes = np.asarray(numeric["elem_bytes"], dtype=np.int64)
+    dram_table, dram_idx = cats["dram"]
+    bsp_table, bsp_idx = cats["bsp"]
 
-    if np.any(n_ga < 1) or np.any(simd < 1) or np.any(delta < 1):
+    if np.any(n_ga < 1) or np.any(simd < 1) \
+            or np.any(np.asarray(numeric["delta"], dtype=np.int64) < 1):
         raise ValueError("n_ga, simd and delta must be >= 1")
     if np.any(n_elems % simd):
         raise ValueError("n_elems must be divisible by simd at every point")
@@ -306,10 +401,10 @@ def _build(points: dict[str, np.ndarray], n: int,
     is_atomic = type_codes == _mb.ATOMIC
     is_ack = type_codes == _mb.WRITE_ACK
 
-    points = _normalize_inert_axes(points, is_atomic, is_ack)
-    delta = points["delta"]
-    val_constant = points["val_constant"]
-    include_write = points["include_write"]
+    numeric = _normalize_inert_axes(numeric, is_atomic, is_ack)
+    delta = numeric["delta"]
+    val_constant = numeric["val_constant"]
+    include_write = numeric["include_write"]
 
     # Group 1: the read side (plus the same-type write for plain BC types).
     g1_type = np.where(is_ack, _mb.ALIGNED, type_codes)
@@ -323,9 +418,11 @@ def _build(points: dict[str, np.ndarray], n: int,
 
     kernel = np.concatenate([np.arange(n), np.arange(n)])
     vec = np.concatenate
-    dram_f = {k: np.asarray([getattr(d, k) for d in dram_table])[dram_idx]
+    dram_f = {k: np.asarray([getattr(d, k) if d is not None else 0
+                             for d in dram_table])[dram_idx]
               for k in ("dq", "bl", "f_mem", "t_rcd", "t_rp", "t_wr")}
-    bsp_f = {k: np.asarray([getattr(b, k) for b in bsp_table])[bsp_idx]
+    bsp_f = {k: np.asarray([getattr(b, k) if b is not None else 0
+                            for b in bsp_table])[bsp_idx]
              for k in ("burst_cnt", "max_th")}
 
     batch = _mb.GroupBatch(
@@ -352,7 +449,40 @@ def _build(points: dict[str, np.ndarray], n: int,
                            weights=np.asarray(batch.count * batch.ls_width,
                                               dtype=np.float64),
                            minlength=n)
-    return SweepResult(points=points, estimate=est, resource=resource)
+    return est, resource, cats, numeric, own
+
+
+def _materialize_points(numeric: dict[str, np.ndarray],
+                        cats: dict[str, tuple[list, np.ndarray]],
+                        ) -> dict[str, np.ndarray]:
+    """Per-point axis columns in canonical ``AXES`` order (object gathers
+    for the categorical axes — the one place they are built)."""
+    points: dict[str, np.ndarray] = {}
+    for name in AXES:
+        if name in _CATEGORICAL:
+            table, codes = cats[name]
+            points[name] = _object_array(table)[codes]
+        else:
+            points[name] = np.asarray(numeric[name])
+    return points
+
+
+def _build(points: dict[str, np.ndarray], n: int,
+           cats: dict[str, tuple[list, np.ndarray]],
+           estimator: Callable[[_mb.GroupBatch], _mb.BatchEstimate] | None = None,
+           ) -> SweepResult:
+    """Materialized scoring: every point's config + estimate held in memory.
+
+    ``points`` carries the numeric per-point columns; ``cats`` must carry a
+    ``(table, codes)`` pair for every categorical axis (``_grid_points`` /
+    ``_random_points`` always do).  The returned ``SweepResult.points``
+    holds the *resolved* configuration — hardware-axis dram/bsp overrides
+    applied, inert axes normalized — exactly what was scored.
+    """
+    numeric = {k: points[k] for k in _NUMERIC}
+    est, resource, cats, numeric, _ = _score(numeric, cats, n, estimator)
+    return SweepResult(points=_materialize_points(numeric, cats),
+                       estimate=est, resource=resource)
 
 
 def _normalize_axes(overrides: Mapping[str, Any]) -> dict[str, list]:
@@ -381,23 +511,43 @@ def _normalize_axes(overrides: Mapping[str, Any]) -> dict[str, list]:
 def _grid_points(axes: Mapping[str, Any],
                  ) -> tuple[dict[str, np.ndarray], int,
                             dict[str, tuple[list, np.ndarray]]]:
-    """Per-point axis arrays for the full Cartesian product of ``axes``."""
-    lists = _normalize_axes(axes)
-    sizes = [len(v) for v in lists.values()]
-    n = int(np.prod(sizes))
-    if n == 0:
-        raise ValueError("empty sweep: every axis needs at least one value")
-    grids = np.meshgrid(*[np.arange(s) for s in sizes], indexing="ij")
+    """Per-point axis arrays for the full Cartesian product of ``axes``.
+
+    Point ids are decoded with mixed-radix index arithmetic (see
+    :class:`repro.core.stream.GridEnumerator`) rather than ``np.meshgrid``,
+    so this shares its enumeration — point ``i`` here is point ``i`` of the
+    streaming path — while materializing only integer code arrays:
+    ``points`` carries the numeric columns, the categorical axes live in
+    ``cats`` as ``(table, codes)`` only (consumers that need per-point
+    objects, like the scalar backend, gather them from ``cats``).
+    """
+    from repro.core.stream import GridEnumerator
+
+    enum = GridEnumerator(_normalize_axes(axes))
+    codes = enum.codes(np.arange(enum.n, dtype=np.int64))
     points: dict[str, np.ndarray] = {}
     cats: dict[str, tuple[list, np.ndarray]] = {}
-    for (name, vals), g in zip(lists.items(), grids):
-        idx = g.reshape(-1)
+    for name, vals in enum.lists.items():
+        idx = codes[name]
         if name in _CATEGORICAL:
-            points[name] = np.asarray(vals, dtype=object)[idx]
             cats[name] = (vals, idx)
         else:
             points[name] = np.asarray(vals)[idx]
-    return points, n, cats
+    return points, enum.n, cats
+
+
+def _is_numeric_range(v) -> bool:
+    """True for a 2-tuple that means an inclusive integer range (lo, hi).
+
+    *Both* elements must be plain numbers: a pair of categorical values —
+    e.g. two :class:`LsuType` members, or booleans — is a 2-element value
+    list to sample from, not a range, regardless of which element is which
+    (checking only ``v[0]`` misclassified mixed pairs).
+    """
+    return (isinstance(v, tuple) and len(v) == 2
+            and all(isinstance(x, numbers.Real)
+                    and not isinstance(x, bool)
+                    and not isinstance(x, LsuType) for x in v))
 
 
 def _random_points(n: int, seed: int, axes: Mapping[str, Any],
@@ -405,18 +555,18 @@ def _random_points(n: int, seed: int, axes: Mapping[str, Any],
                               dict[str, tuple[list, np.ndarray]]]:
     """Per-point axis arrays for ``n`` uniformly sampled design points.
 
-    Numeric axes given as a 2-tuple ``(lo, hi)`` are sampled as integers in
-    the inclusive range; any axis given as a list is sampled uniformly from
-    it; scalars are held fixed.  Each ``n_elems`` sample is rounded down to
-    a multiple of *that point's own* ``simd`` (floored at ``simd``), so the
-    sampled values stay inside the requested range whenever it contains any
-    multiple of the point's simd — rounding to the global LCM of all sampled
-    simd values could leave the range entirely.
+    Numeric axes given as a 2-tuple ``(lo, hi)`` of numbers are sampled as
+    integers in the inclusive range; any axis given as a list (or a tuple
+    that is not a numeric pair — e.g. two ``LsuType`` values) is sampled
+    uniformly from it; scalars are held fixed.  Each ``n_elems`` sample is
+    rounded down to a multiple of *that point's own* ``simd`` (floored at
+    ``simd``), so the sampled values stay inside the requested range
+    whenever it contains any multiple of the point's simd — rounding to the
+    global LCM of all sampled simd values could leave the range entirely.
     """
     rng = np.random.default_rng(seed)
     tuples = {k: v for k, v in axes.items()
-              if isinstance(v, tuple) and len(v) == 2
-              and k not in _CATEGORICAL and not isinstance(v[0], (LsuType,))}
+              if k not in _CATEGORICAL and _is_numeric_range(v)}
     lists = _normalize_axes({k: v for k, v in axes.items() if k not in tuples})
 
     points: dict[str, np.ndarray] = {}
@@ -429,7 +579,6 @@ def _random_points(n: int, seed: int, axes: Mapping[str, Any],
             vals = lists[name]
             idx = rng.integers(0, len(vals), size=n)
             if name in _CATEGORICAL:
-                points[name] = np.asarray(vals, dtype=object)[idx]
                 cats[name] = (vals, idx)
             else:
                 points[name] = np.asarray(vals)[idx]
@@ -437,27 +586,3 @@ def _random_points(n: int, seed: int, axes: Mapping[str, Any],
     n_elems = np.asarray(points["n_elems"], dtype=np.int64)
     points["n_elems"] = np.maximum((n_elems // simd) * simd, simd)
     return points, n, cats
-
-
-def sweep_grid(**axes) -> SweepResult:
-    """Deprecated: use ``repro.Session().sweep(repro.Space.grid(**axes))``.
-
-    Scores the full Cartesian product of the given axes in one pass.  Every
-    axis (see ``AXES``) accepts a single value or a sequence; stride applies
-    to the burst-coalesced aligned/non-aligned types only (write-ACK reads
-    and atomics are stride-1 by construction, like ``apps.microbench``).
-    """
-    warn_deprecated("repro.core.sweep.sweep_grid()",
-                    "repro.Session().sweep(repro.Space.grid(...))")
-    return _build(*_grid_points(axes))
-
-
-def sweep_random(n: int, *, seed: int = 0, **axes) -> SweepResult:
-    """Deprecated: use ``repro.Session().sweep(repro.Space.random(n, ...))``.
-
-    Scores ``n`` uniformly sampled design points (see ``_random_points`` for
-    the sampling rules).
-    """
-    warn_deprecated("repro.core.sweep.sweep_random()",
-                    "repro.Session().sweep(repro.Space.random(n, ...))")
-    return _build(*_random_points(n, seed, axes))

@@ -346,15 +346,3 @@ def _validate(cases: Sequence[ValidationCase] | None = None, *,
         ))
     return ValidationReport(results, failures, dram, measured_bw,
                             calibration_factor=float(factor))
-
-
-def validate(cases: Sequence[ValidationCase] | None = None, *,
-             iters: int = 3, warmup: int = 1,
-             dram: DramParams | None = None,
-             base: DramParams | None = None) -> ValidationReport:
-    """Deprecated: use ``repro.Session(...).validate(cases)``."""
-    from repro.deprecation import warn_deprecated
-
-    warn_deprecated("repro.core.validate.validate()",
-                    "repro.Session(...).validate(cases)")
-    return _validate(cases, iters=iters, warmup=warmup, dram=dram, base=base)

@@ -1,11 +1,13 @@
-"""One shared deprecation channel for the pre-`Session` entry points.
+"""One shared deprecation channel for legacy names.
 
 PR 3 consolidated the five disjoint entry points (``model.estimate``,
 ``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
 ``autotune.autotune``, ``validate.validate``) behind the unified
-:class:`repro.Design` / :class:`repro.Session` API.  The old names keep
-working for one release through shims that call this helper; internal code
-routes through the underlying implementations directly so a
+:class:`repro.Design` / :class:`repro.Session` API; those shims completed
+their one-release cycle and are now removed.  The remaining users are the
+PR-4 hardware constant aliases (``repro.core.fpga.DDR4_1866`` … ,
+``repro.core.hbm.TPU_V5E``), which keep warning for one more release.
+Internal code routes through :mod:`repro.hw` directly so a
 ``-W error::DeprecationWarning`` run stays clean (the CI import-surface
 check relies on that).
 """

@@ -199,6 +199,69 @@ class TestSweepReport:
             Session().sweep(Space.grid(n_ga=[1]), n_ga=[2])
 
 
+class TestStreamingSurface:
+    """API semantics of streaming sweeps (bit-equality lives in
+    tests/test_stream.py)."""
+
+    def test_space_stream_marks_grid(self):
+        sp = Space.grid(n_ga=[1, 2]).stream(chunk_size=64)
+        assert sp.chunk_size == 64
+        assert Space.grid(n_ga=[1]).chunk_size is None
+        with pytest.raises(ValueError):
+            Space.grid(n_ga=[1]).stream(chunk_size=0)
+        with pytest.raises(TypeError):
+            Space.random(4, n_ga=(1, 2)).stream()
+
+    def test_stream_report_protocol(self):
+        sp = Space.grid(lsu_type=ALL_TYPES, n_ga=[1, 2, 4],
+                        n_elems=[1 << 14]).stream(chunk_size=5)
+        res = Session().sweep(sp)
+        assert res.is_streaming and res.kind == "sweep"
+        assert res.n_points == 12           # the whole space...
+        assert len(res.resource) <= 12      # ...but only survivors held
+        assert len(res.rows()) == len(res.resource)
+        assert res.to_csv().splitlines()[0].startswith("lsu_type")
+        s = res.summary()
+        assert s["n_points"] == 12 and s["backend"] == "numpy-batch"
+        best = res.best()
+        assert best.t_exe == pytest.approx(float(np.min(res.t_exe)))
+
+    def test_reducers_imply_streaming(self):
+        from repro.core.stream import StatsReducer, TopKReducer
+
+        res = Session().sweep(Space.grid(n_ga=[1, 2], n_elems=[1 << 14]),
+                              reducers=[TopKReducer(1), StatsReducer()])
+        assert res.is_streaming and len(res.resource) == 1
+
+    def test_stream_report_guards(self):
+        # 12 points > the default TopKReducer(10): the selection truncates
+        res = Session().sweep(Space.grid(n_ga=list(range(1, 13)),
+                                         n_elems=[1 << 14]), chunk_size=5)
+        with pytest.raises(ValueError, match="front"):
+            res.pareto(["t_exe", "total_bytes"])
+        with pytest.raises(ValueError, match="top"):
+            res.top_k(10_000)
+        with pytest.raises(ValueError, match="top-k by"):
+            res.top_k(1, key="resource")
+        # ...but a reducer that kept the whole space answers any k, like
+        # the materialized path
+        small = Session().sweep(Space.grid(n_ga=[1, 2], n_elems=[1 << 14]),
+                                chunk_size=1)
+        assert len(small.top_k(10_000)) == 2
+        # and pareto() without a ParetoReducer raises the helpful error
+        from repro.core.stream import StatsReducer, TopKReducer
+
+        nofront = Session().sweep(
+            Space.grid(n_ga=[1, 2], n_elems=[1 << 14]),
+            reducers=[TopKReducer(5), StatsReducer()])
+        with pytest.raises(ValueError, match="front"):
+            nofront.pareto()
+
+    def test_random_space_cannot_stream(self):
+        with pytest.raises(TypeError, match="grid"):
+            Session().sweep(Space.random(8, n_ga=(1, 2)), chunk_size=4)
+
+
 class TestSatelliteFixes:
     def test_random_n_elems_rounds_to_own_simd(self):
         """Per-point rounding keeps samples in range even when the LCM of the
@@ -213,6 +276,26 @@ class TestSatelliteFixes:
         # [30, 60] is reachable).
         assert np.all((ne >= 30) & (ne <= 60))
         assert len(np.unique(ne)) > len(np.unique((ne // 15) * 15))
+
+    def test_random_tuple_of_categoricals_samples_both(self):
+        """A 2-tuple of LsuType values is a value list, not a numeric range
+        (the old detection only looked at the first element)."""
+        res = Session().sweep(Space.random(
+            128, seed=5,
+            lsu_type=(LsuType.BC_ALIGNED, LsuType.BC_WRITE_ACK),
+            n_ga=(1, 4), n_elems=(1 << 10, 1 << 12)))
+        types = set(np.asarray(res.points["lsu_type"]).tolist())
+        assert types == {LsuType.BC_ALIGNED, LsuType.BC_WRITE_ACK}
+        ga = np.asarray(res.points["n_ga"], dtype=np.int64)
+        assert ga.min() >= 1 and ga.max() <= 4      # ranges still ranges
+
+    def test_random_tuple_of_bools_is_a_value_list(self):
+        """(False, True) samples the two values — booleans are categorical,
+        never an integer range."""
+        res = Session().sweep(Space.random(
+            64, seed=9, include_write=(False, True), n_elems=(1 << 10, 1 << 12)))
+        iw = res.points["include_write"]
+        assert set(np.asarray(iw).tolist()) <= {False, True}
 
     def test_atomic_include_write_is_inert(self):
         """include_write must not create phantom distinct atomic designs."""
@@ -240,55 +323,23 @@ class TestSatelliteFixes:
         assert front == set(range(len(vals))) - dominated
 
 
-class TestDeprecationShims:
-    def test_sweep_grid_warns_and_matches(self):
-        from repro.core.sweep import sweep_grid
+class TestRemovedEntryPoints:
+    """The PR-3 deprecation shims completed their cycle and are gone; the
+    PR-4 hardware aliases (tested in test_hw.py) remain for one release."""
 
-        with pytest.warns(DeprecationWarning, match="Session"):
-            old = sweep_grid(n_ga=[1, 2], n_elems=[1 << 14])
-        new = Session().sweep(n_ga=[1, 2], n_elems=[1 << 14])
-        np.testing.assert_allclose(old.t_exe, new.t_exe, rtol=0)
+    def test_shims_are_removed(self):
+        from repro.core import autotune, model, predictor, sweep, validate
 
-    def test_sweep_random_warns(self):
-        from repro.core.sweep import sweep_random
+        for mod, name in ((model, "estimate"), (sweep, "sweep_grid"),
+                          (sweep, "sweep_random"), (predictor, "predict"),
+                          (autotune, "autotune"), (validate, "validate")):
+            assert not hasattr(mod, name), f"{mod.__name__}.{name} lingers"
 
-        with pytest.warns(DeprecationWarning):
-            sweep_random(8, n_elems=(1 << 12, 1 << 14))
+    def test_repro_core_no_longer_reexports_estimate(self):
+        import repro.core as core
 
-    def test_model_estimate_warns_and_matches(self):
-        from repro.core.model import estimate
-
-        lsus = microbench(LsuType.BC_ALIGNED, n_ga=2, n_elems=1 << 14)
-        with pytest.warns(DeprecationWarning, match="Session"):
-            old = estimate(lsus, DDR4_1866)
-        new = Session(backend="scalar").estimate(
-            Design(lsus=tuple(lsus), f=1))
-        assert old.t_exe == pytest.approx(new.t_exe, rel=1e-12)
-
-    def test_predictor_predict_warns(self):
-        from repro.core.predictor import predict
-
-        hlo = ("HloModule m\n\n"
-               "ENTRY main () -> f32[] {\n"
-               "  ROOT c = f32[] constant(0)\n}\n")
-        with pytest.warns(DeprecationWarning, match="Session"):
-            pred = predict(hlo)
-        assert pred.flops == 0.0
-
-    def test_autotune_warns(self):
-        from repro.core import autotune as AT
-
-        with pytest.warns(DeprecationWarning, match="Session"):
-            res = AT.autotune(None, None, None, [], cache=False)
-        assert res == [] and res.failures == []
-
-    def test_validate_warns(self):
-        pytest.importorskip("jax")
-        from repro.core import validate as V
-
-        with pytest.warns(DeprecationWarning, match="Session"):
-            rep = V.validate([], iters=1)
-        assert rep.results == []
+        assert not hasattr(core, "estimate")
+        assert not hasattr(core, "sweep_grid")
 
     def test_import_surface_is_warning_free(self):
         """`import repro` + the curated names never trigger the shims."""

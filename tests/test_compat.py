@@ -159,13 +159,13 @@ class TestAutotuneFailureHandling:
             "b": NotImplementedError("no rule for optimization_barrier")})
         cands = [AT.Candidate("a", {}, {}), AT.Candidate("b", {}, {})]
         with pytest.raises(RuntimeError, match="not candidate-specific"):
-            AT.autotune(None, None, None, cands, cache=False)
+            AT._autotune(None, None, None, cands, cache=False)
 
     def test_partial_failure_recorded(self, monkeypatch):
         AT = self._patch(monkeypatch,
                          {"bad": ValueError("candidate-specific boom")})
         cands = [AT.Candidate("ok", {}, {}), AT.Candidate("bad", {}, {})]
-        res = AT.autotune(None, None, None, cands, cache=False)
+        res = AT._autotune(None, None, None, cands, cache=False)
         assert len(res) == 1 and res[0].candidate.name == "ok"
         assert len(res.failures) == 1
         assert res.failures[0].summary()["name"] == "bad"
@@ -175,7 +175,7 @@ class TestAutotuneFailureHandling:
         AT = self._patch(monkeypatch, {"a": ValueError("x"),
                                        "b": TypeError("y")})
         cands = [AT.Candidate("a", {}, {}), AT.Candidate("b", {}, {})]
-        res = AT.autotune(None, None, None, cands, cache=False)
+        res = AT._autotune(None, None, None, cands, cache=False)
         assert list(res) == []
         assert {f.error_type for f in res.failures} == {"ValueError",
                                                         "TypeError"}

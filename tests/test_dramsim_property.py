@@ -6,7 +6,8 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (pip install -e '.[dev]')")
 import hypothesis.strategies as st  # noqa: E402
 
-from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, estimate  # noqa: E402
+from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType  # noqa: E402
+from repro.core.model import _estimate as estimate  # noqa: E402 — scalar ref
 from repro.core.apps import microbench  # noqa: E402
 from repro.core.dramsim import simulate  # noqa: E402
 

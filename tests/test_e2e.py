@@ -106,13 +106,14 @@ def test_serve_generates_tokens():
 
 @pytest.mark.slow
 def test_autotune_ranks_candidates():
-    from repro.core.autotune import Candidate, autotune
+    from repro import Session
+    from repro.core.autotune import Candidate
     cfg = reduced_config(ARCHS["stablelm-3b"])
     mesh = make_host_mesh()
     shape = ShapeSpec("t", 32, 4, "train")
     cands = [Candidate("baseline", {}, {}),
              Candidate("no-remat", {"remat": False}, {})]
-    results = autotune(cfg, shape, mesh, cands)
+    results = Session().autotune(cfg, shape, mesh, cands)
     assert len(results) == 2
     assert results[0].t_step <= results[1].t_step
     for r in results:

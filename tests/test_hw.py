@@ -311,6 +311,56 @@ class TestSweepHardwareAxis:
         assert res.n_points == 32
         assert np.all(np.asarray(res.t_exe) > 0)
 
+    def test_vectorized_apply_hardware_axis_matches_reference_loop(self):
+        """The factorize + table-gather rewrite of `_apply_hardware_axis`
+        keeps the old per-point loop's semantics exactly: same view per
+        unique spec (dedup), same host-factor scale, None rows untouched."""
+        from repro.core.sweep import _apply_hardware_axis
+
+        specs = [None, hw.get("stratix10_ddr4_1866"),
+                 hw.get("tpu_v5e").with_host_factor(1.7)]
+        rng = np.random.default_rng(13)
+        n = 64
+        col = np.empty(n, dtype=object)
+        col[:] = [specs[i] for i in rng.integers(0, len(specs), n)]
+        base_d, base_b = (hw.get("stratix10_ddr4_2666").dram_params(),
+                          hw.get("stratix10_ddr4_2666").bsp_params())
+        dram = np.empty(n, dtype=object)
+        dram[:] = [base_d] * n
+        bsp = np.empty(n, dtype=object)
+        bsp[:] = [base_b] * n
+        points = {"hardware": col, "dram": dram, "bsp": bsp}
+
+        got_points, got_scale = _apply_hardware_axis(dict(points), n)
+
+        # reference: the pre-vectorization per-point loop
+        views = {}
+        ref_d, ref_b, ref_s = dram.copy(), bsp.copy(), np.ones(n)
+        for i, h in enumerate(col):
+            if h is None:
+                continue
+            v = views.get(id(h))
+            if v is None:
+                v = views[id(h)] = (h.dram_params(), h.bsp_params(),
+                                    float(h.host_factor))
+            ref_d[i], ref_b[i], ref_s[i] = v
+        np.testing.assert_array_equal(got_scale, ref_s)
+        assert all(d == r for d, r in zip(got_points["dram"], ref_d))
+        assert all(b == r for b, r in zip(got_points["bsp"], ref_b))
+        # dedup contract: one view object per unique spec
+        ids = {id(d) for d, h in zip(got_points["dram"], col)
+               if h is not None}
+        assert len(ids) == len({id(h) for h in col if h is not None})
+
+    def test_all_none_hardware_axis_is_identity(self):
+        from repro.core.sweep import _apply_hardware_axis
+
+        n = 8
+        col = np.empty(n, dtype=object)
+        pts = {"hardware": col}        # dram/bsp untouched when all None
+        out, scale = _apply_hardware_axis(pts, n)
+        assert out is pts and np.all(scale == 1.0)
+
 
 class TestCacheKey:
     def test_candidate_key_includes_hardware(self):

@@ -4,7 +4,8 @@ import math
 
 import pytest
 
-from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, STRATIX10_BSP, estimate
+from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, STRATIX10_BSP
+from repro.core.model import _estimate as estimate   # the scalar reference
 from repro.core.apps import APPS, microbench, table4_rows
 from repro.core.baselines import hlscope_estimate, wang_estimate
 from repro.core import model as M

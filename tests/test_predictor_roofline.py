@@ -6,7 +6,7 @@ import pytest
 from repro.core import hlo as HLO
 from repro import TPU_V5E
 from repro.core.hbm import AccessClass, Traffic, memory_time, traffic_time
-from repro.core.predictor import predict
+from repro.core.predictor import predict_step as predict
 from repro.core.roofline import RooflineCell, build_cell
 
 

@@ -3,13 +3,14 @@ the >= 20x exploration-scale speedup, and the batched autotune scorer."""
 import numpy as np
 import pytest
 
-from repro.core import (DDR4_1866, DDR4_2666, Lsu, LsuType, STRATIX10_BSP,
-                        estimate)
+from repro import Session, Space
+from repro.core import DDR4_1866, DDR4_2666, Lsu, LsuType, STRATIX10_BSP
 from repro.core import model as M
 from repro.core import model_batch as MB
 from repro.core.apps import microbench
 from repro.core.fpga import BspParams
-from repro.core.sweep import pareto_front, sweep_grid, sweep_random
+from repro.core.model import _estimate as estimate   # the scalar reference
+from repro.core.sweep import _pareto_scan, pareto_front
 
 ALL_TYPES = [LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
              LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED]
@@ -36,7 +37,7 @@ class TestBatchedMatchesScalar:
     def test_grid_elementwise(self):
         """Mixed-type grid: t_exe, bound ratio and classification all agree
         with the scalar estimate path at every point."""
-        res = sweep_grid(
+        res = Session().sweep(
             lsu_type=ALL_TYPES,
             n_ga=[1, 2, 4],
             simd=[1, 4, 16],
@@ -58,7 +59,7 @@ class TestBatchedMatchesScalar:
 
     def test_random_sweep_property(self):
         """Randomized design points (the property test): batched == scalar."""
-        res = sweep_random(
+        res = Session().sweep(Space.random(
             512, seed=1234,
             lsu_type=ALL_TYPES,
             n_ga=(1, 8),
@@ -68,7 +69,7 @@ class TestBatchedMatchesScalar:
             include_write=[False, True],
             val_constant=[False, True],
             dram=[DDR4_1866, DDR4_2666],
-        )
+        ))
         scalar = np.array([scalar_point(res.points, i).t_exe
                            for i in range(res.n_points)])
         np.testing.assert_allclose(res.t_exe, scalar, rtol=1e-6)
@@ -174,8 +175,23 @@ class TestPareto:
         }
         assert front == set(range(len(vals))) - dominated
 
+    def test_2d_fast_path_matches_scan(self):
+        """The vectorized 2-objective front == the lexsort+scan reference,
+        including duplicated rows and heavy first-objective ties."""
+        rng = np.random.default_rng(11)
+        vals = rng.random((2000, 2))
+        vals[rng.integers(0, 2000, 200)] = vals[rng.integers(0, 2000, 200)]
+        vals[:500, 0] = np.round(vals[:500, 0], 1)     # big v0 tie groups
+        np.testing.assert_array_equal(pareto_front(vals), _pareto_scan(vals))
+        # degenerate shapes
+        one = np.array([[0.5, 0.5]])
+        np.testing.assert_array_equal(pareto_front(one), [0])
+        same = np.ones((7, 2))
+        np.testing.assert_array_equal(pareto_front(same), np.arange(7))
+
     def test_sweep_pareto_objectives(self):
-        res = sweep_grid(lsu_type=ALL_TYPES, n_ga=[1, 2, 4], simd=[1, 4, 16])
+        res = Session().sweep(lsu_type=ALL_TYPES, n_ga=[1, 2, 4],
+                              simd=[1, 4, 16])
         front = res.pareto()
         assert len(front) >= 1
         # every front point must be non-dominated in (t_exe, resource)
@@ -194,7 +210,7 @@ class TestExplorationScale:
         t_batch = float("inf")      # min-of-3 damps scheduler noise
         for _ in range(3):
             t0 = time.perf_counter()
-            res = sweep_grid(**FULL_AXES)
+            res = Session().sweep(**FULL_AXES)
             t_batch = min(t_batch, time.perf_counter() - t0)
         assert res.n_points >= 10_000
 
@@ -208,7 +224,7 @@ class TestExplorationScale:
 
 class TestBatchedAutotuneScorer:
     def test_rank_records_matches_scalar_predictor(self):
-        """The batched ranker reproduces predictor.predict's roofline terms."""
+        """The batched ranker reproduces the step predictor's roofline terms."""
         from repro.core import autotune as AT
         from repro.core import hbm as _hbm
         from repro import TPU_V5E

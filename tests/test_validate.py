@@ -45,7 +45,7 @@ class TestHarness:
         def boom():
             raise RuntimeError("no kernel here")
 
-        rep = V.validate([V.ValidationCase("broken", boom)], iters=1)
+        rep = V._validate([V.ValidationCase("broken", boom)], iters=1)
         assert rep.results == []
         assert len(rep.failures) == 1
         assert "no kernel here" in rep.failures[0]["error"]
@@ -56,7 +56,7 @@ class TestHarness:
         cases = [c for c in V.default_cases()
                  if c.name in ("membench_aligned", "membench_strided",
                                "rglru_scan", "decode_attention")]
-        rep = V.validate(cases, iters=2, warmup=1)
+        rep = V._validate(cases, iters=2, warmup=1)
         assert len(rep.results) >= 3, rep.failures
         for r in rep.results:
             assert np.isfinite(r.err_pct), r
