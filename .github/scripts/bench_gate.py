@@ -1,4 +1,5 @@
-"""Streaming-sweep perf gate: fail CI on a >30% points/sec regression.
+"""Perf gate: fail CI on a >30% streaming-throughput or serving-latency
+regression.
 
 Compares the freshly written ``BENCH_smoke.json`` (produced by
 ``python -m benchmarks.run --smoke --out json`` earlier in the job) against
@@ -24,11 +25,22 @@ notice; that shared-core case is tracked by the recorded absolute numbers
 in the artifact but cannot be hard-gated without a model-independent
 machine probe.
 
+The serving layer gates the same way on the ``serve_smoke`` rows:
+
+* machine-independent invariant, judged in-run: the hot-cache p99 must
+  stay within its recorded budget (``p99_budget``, 5x) of the same run's
+  single-request ``Session.estimate`` latency — the serving layer may
+  never cost an interactive client more than that multiple;
+* ratchet vs the committed baseline: hot p99 more than ``TOLERANCE``
+  above the committed value fails, unless the in-run ``single`` control
+  row slowed past the same tolerance too (slower machine, not a serving
+  regression).
+
 A missing baseline entry (first run after the feature lands, or a renamed
-backend) passes with a notice — the gate ratchets only what is recorded.
-The committed baseline should be refreshed (re-run the smoke bench and
-commit the JSON) whenever the engine or the benchmark grid intentionally
-changes.
+backend/scenario) passes with a notice — the gate ratchets only what is
+recorded.  The committed baseline should be refreshed (re-run the smoke
+bench and commit the JSON) whenever the engine or the benchmark grid
+intentionally changes.
 """
 from __future__ import annotations
 
@@ -56,6 +68,60 @@ def baseline_pps(payload: dict) -> float | None:
     return None
 
 
+def serve_rows(payload: dict) -> dict[str, dict]:
+    rows = (payload.get("details") or {}).get("serve_smoke") or []
+    return {r["scenario"]: r for r in rows}
+
+
+def check_serve(fresh_payload: dict, base_payload: dict | None,
+                failures: list[str]) -> None:
+    """Gate the serving-latency rows (see module docstring)."""
+    fresh = serve_rows(fresh_payload)
+    hot, single = fresh.get("serve_hot"), fresh.get("single")
+    if not hot or not single:
+        print("bench gate: serve: no serve_smoke rows in fresh artifact — "
+              "skipped")
+        return
+    # 1. in-run invariant: hot p99 within its budget of single-request
+    #    latency (machine-independent; both numbers from this run)
+    budget = float(hot.get("p99_budget", 5.0))
+    p99, ref = float(hot["p99_us"]), float(single["p50_us"])
+    if p99 > budget * ref:
+        failures.append(
+            f"serve_hot: p99 {p99:,.0f}us exceeds {budget:.0f}x the "
+            f"single-request {ref:,.0f}us (in-run invariant)")
+    else:
+        print(f"bench gate: serve_hot: p99 {p99:,.0f}us within "
+              f"{budget:.0f}x single {ref:,.0f}us -> OK")
+    # 2. ratchet vs the committed baseline, with the single-row control
+    base = serve_rows(base_payload) if base_payload else {}
+    bhot, bsingle = base.get("serve_hot"), base.get("single")
+    if not bhot or not bsingle:
+        print("bench gate: serve_hot: no committed baseline — passing "
+              "(first run records it)")
+        return
+    want = float(bhot["p99_us"])
+    ceiling = (1.0 + TOLERANCE) * want
+    if p99 <= ceiling:
+        print(f"bench gate: serve_hot: p99 {p99:,.0f}us vs committed "
+              f"{want:,.0f}us (ceiling {ceiling:,.0f}us) -> OK")
+        return
+    machine_slow = float(single["p50_us"]) > \
+        (1.0 + TOLERANCE) * float(bsingle["p50_us"])
+    if machine_slow:
+        print(f"bench gate: serve_hot: p99 {p99:,.0f}us above the "
+              f"{ceiling:,.0f}us ceiling, but the single-request control "
+              f"slowed too ({single['p50_us']:,.0f}us vs committed "
+              f"{bsingle['p50_us']:,.0f}us) — slower machine, not a "
+              f"serving regression -> OK")
+        return
+    failures.append(
+        f"serve_hot: p99 {p99:,.0f}us is >{TOLERANCE:.0%} above the "
+        f"committed {want:,.0f}us without a matching single-request "
+        f"slowdown ({single['p50_us']:,.0f}us vs "
+        f"{bsingle['p50_us']:,.0f}us)")
+
+
 def main() -> int:
     if not FRESH.exists():
         print(f"bench gate: {FRESH} missing (run benchmarks.run --smoke "
@@ -72,18 +138,20 @@ def main() -> int:
         committed_text = subprocess.run(
             ["git", "show", "HEAD:BENCH_smoke.json"], cwd=ROOT,
             capture_output=True, text=True, check=True).stdout
+        base_payload = json.loads(committed_text)
     except subprocess.CalledProcessError:
-        print("bench gate: no committed BENCH_smoke.json baseline — passing")
-        return 0
-    base_payload = json.loads(committed_text)
-    base = stream_rows(base_payload)
-    committed_base = baseline_pps(base_payload)
-    if not base:
-        print("bench gate: committed baseline has no stream_1m rows — "
-              "passing (first run records it)")
-        return 0
+        print("bench gate: no committed BENCH_smoke.json baseline — "
+              "ratchets skipped (in-run invariants still checked)")
+        base_payload = None
 
-    failures = []
+    failures: list[str] = []
+    check_serve(fresh_payload, base_payload, failures)
+
+    base = stream_rows(base_payload) if base_payload else {}
+    committed_base = baseline_pps(base_payload) if base_payload else None
+    if base_payload is not None and not base:
+        print("bench gate: committed baseline has no stream_1m rows — "
+              "stream ratchet skipped (first run records it)")
     for backend, row in sorted(fresh.items()):
         if not row.get("agree_1e6", False):
             failures.append(f"{backend}: streaming != materialized at 1e-6")

@@ -8,8 +8,10 @@ Usage:
     python -m benchmarks.run --smoke --out json         # fast CI job
 
 ``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
-Fig. 5 stride, a reduced design-space sweep, and the 1M-point streaming
-sweep whose per-backend points/sec + peak RSS feed the CI perf gate) and,
+Fig. 5 stride, a reduced design-space sweep, the 1M-point streaming
+sweep whose per-backend points/sec + peak RSS feed the CI perf gate, and
+the 32-client serving-latency bench whose p50/p99 feed the CI latency
+gate) and,
 with ``--out``, writes the full results as a JSON artifact for CI upload.  ``--out json``
 resolves to ``BENCH_smoke.json`` at the repository root — the recorded
 perf-trajectory artifact CI uploads.  ``--hw <name>`` re-runs everything
@@ -98,6 +100,15 @@ def main() -> None:
         details["stream_1m"] = rows
         summary.append(("stream_1m", us, _derive("stream_1m", rows)))
 
+        # serving layer: 32 concurrent clients against Session.serve() —
+        # hot (cache-warm interactive) p50/p99 latency vs the single-request
+        # baseline, plus cold micro-batched throughput (the latency-gate
+        # entry CI watches).
+        from benchmarks import serve_bench as SVB
+        rows, us = PT.timed(lambda: SVB.serve_bench(session=session))
+        details["serve_smoke"] = rows
+        summary.append(("serve_smoke", us, _derive("serve_smoke", rows)))
+
     if not args.smoke:
         # roofline (reads dry-run artifacts if present)
         try:
@@ -176,6 +187,17 @@ def _derive(name: str, rows: list[dict]) -> str:
                  f"{r['peak_rss_mb']:.0f}MB" for r in rows]
         agree = all(r["agree_1e6"] for r in rows)
         return f"points={rows[0]['n_points']} {' '.join(parts)} agree={agree}"
+    if name == "serve_smoke":
+        by = {r["scenario"]: r for r in rows}
+        single, hot, cold = by["single"], by["serve_hot"], by["serve_cold"]
+        return (f"clients={hot['clients']} "
+                f"hot_p50={hot['p50_us']:.0f}us "
+                f"hot_p99={hot['p99_us']:.0f}us "
+                f"({hot['x_single']:.2f}x single {single['p50_us']:.0f}us, "
+                f"budget {hot['p99_budget']:.0f}x) "
+                f"hot={hot['qps']:,.0f}qps hit={hot['cache_hit_rate']:.2f} "
+                f"cold={cold['qps']:,.0f}qps "
+                f"mean_batch={cold['mean_batch']:.1f}")
     if name == "table6_kernel_validation":
         errs = [r["err_pct"] for r in rows if isinstance(r["err_pct"], float)]
         fails = len(rows) - len(errs)

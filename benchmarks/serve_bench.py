@@ -1,0 +1,154 @@
+"""Serving-layer latency benchmark: N concurrent clients vs one Server.
+
+The serving layer's claim is that an interactive advisor can hammer one
+``Session.serve()`` front door from many threads and see single-request
+latency (cache steady state) or batched throughput (cold unique queries)
+without giving up the bit-equal numbers of serial ``Session.estimate``.
+This benchmark measures the claim three ways, client-side (submit ->
+result, the latency a caller actually observes):
+
+* ``single``     — serial ``Session.estimate`` on one thread: the baseline
+  every serving number is judged against (and the in-run machine-speed
+  control the CI gate uses to tell a slow runner from a regression).
+* ``serve_hot``  — ``N_CLIENTS`` interactive threads replaying a shared
+  design pool (advisor steady state, cache warm) with a short per-request
+  think time, as an interactive client has: p50/p99/qps + hit rate, think
+  time excluded from the latencies.  The acceptance invariant rides on
+  this row: p99 must stay within ``HOT_P99_BUDGET`` x the single-request
+  latency.
+* ``serve_cold`` — every request a distinct design, result cache off, no
+  think time: the micro-batcher's throughput (qps, mean batch) under
+  closed-loop saturation.  (Under a saturating closed loop the *latency*
+  of any single-interpreter server degenerates to clients x service time,
+  so the latency budget is judged on the interactive row and this row is
+  judged on throughput.)
+
+Run:  python -m benchmarks.serve_bench   (or via benchmarks/run.py --smoke)
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+import numpy as np
+
+from repro import Design, Session
+from repro.core.lsu import LsuType
+
+N_CLIENTS = 32          #: acceptance floor: >= 32 concurrent clients
+HOT_POOL = 64           #: distinct designs in the shared hot pool
+HOT_PASSES = 4          #: passes each hot client makes over the pool
+COLD_PER_CLIENT = 48    #: distinct designs per client in the cold run
+HOT_P99_BUDGET = 5.0    #: hot p99 must stay within this x single latency
+HOT_THINK_S = (0.5e-3, 2e-3)   #: per-request think time range, hot clients
+
+_TYPES = [LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+          LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED]
+
+
+def _pool(n: int, tag: str) -> list[Design]:
+    combos = itertools.cycle(
+        (t, g, s, d) for t in _TYPES for g in (1, 2, 3, 4)
+        for s in (1, 4, 16) for d in (1, 3, 7))
+    return [Design.microbench(t, n_ga=g, simd=s, delta=d,
+                              n_elems=1 << (12 + i % 5),
+                              name=f"{tag}-{i}")
+            for i, (t, g, s, d) in zip(range(n), combos)]
+
+
+def _pcts(lat_s: list[float]) -> dict:
+    """p50/p99/mean in microseconds (same index convention as Server.stats)."""
+    lat = sorted(lat_s)
+    n = len(lat)
+    pct = lambda q: lat[min(n - 1, int(q * (n - 1) + 0.999999))]  # noqa: E731
+    return {"p50_us": pct(0.50) * 1e6, "p99_us": pct(0.99) * 1e6,
+            "mean_us": sum(lat) / n * 1e6}
+
+
+def _hammer(estimate, worklists: list[list[Design]], *,
+            think_s: tuple[float, float] | None = None,
+            ) -> tuple[list[float], float]:
+    """One client thread per worklist; returns per-request latencies + wall.
+
+    ``think_s`` adds a seeded uniform pause between a client's requests
+    (the interactive profile); the pause is outside the timed region.
+    """
+    lats: list[list[float]] = [[] for _ in worklists]
+    start = threading.Barrier(len(worklists))
+
+    def client(i: int) -> None:
+        rng = np.random.default_rng(i)
+        start.wait()
+        for d in worklists[i]:
+            t0 = time.perf_counter()
+            estimate(d)
+            lats[i].append(time.perf_counter() - t0)
+            if think_s is not None:
+                time.sleep(rng.uniform(*think_s))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(len(worklists))]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    return [x for per in lats for x in per], dt
+
+
+def serve_bench(session: Session | None = None, *,
+                n_clients: int = N_CLIENTS) -> list[dict]:
+    sess = session if session is not None else Session()
+    rows: list[dict] = []
+
+    # -- single: the serial baseline + machine-speed control ----------------
+    pool = _pool(HOT_POOL, "hot")
+    for d in pool:                               # warm any lazy state
+        sess.estimate(d)
+    lat = []
+    for d in pool * 2:
+        t0 = time.perf_counter()
+        sess.estimate(d)
+        lat.append(time.perf_counter() - t0)
+    single = {"scenario": "single", "clients": 1, "requests": len(lat),
+              **_pcts(lat), "qps": len(lat) / sum(lat)}
+    rows.append(single)
+
+    # -- serve_hot: shared pool, cache warm (advisor steady state) ----------
+    with sess.serve(max_batch=64, max_wait_ms=0.5) as srv:
+        for d in pool:                           # one miss per design
+            srv.estimate(d)
+        work = [[pool[(i * 7 + k) % len(pool)]   # per-client phase shift
+                 for k in range(HOT_PASSES * len(pool))]
+                for i in range(n_clients)]
+        lat, dt = _hammer(srv.estimate, work, think_s=HOT_THINK_S)
+        st = srv.stats()
+    hot = {"scenario": "serve_hot", "clients": n_clients,
+           "requests": len(lat), **_pcts(lat), "qps": len(lat) / dt,
+           "cache_hit_rate": round(st["cache_hit_rate"], 4)}
+    hot["x_single"] = hot["p99_us"] / single["p50_us"]
+    hot["p99_budget"] = HOT_P99_BUDGET
+    rows.append(hot)
+
+    # -- serve_cold: all-unique designs, cache off (pure micro-batching) ----
+    cold_work = [_pool(COLD_PER_CLIENT, f"cold-{i}") for i in range(n_clients)]
+    with sess.serve(max_batch=n_clients, max_wait_ms=0.25,
+                    cache_size=0) as srv:
+        lat, dt = _hammer(srv.estimate, cold_work)
+        st = srv.stats()
+    rows.append({"scenario": "serve_cold", "clients": n_clients,
+                 "requests": len(lat), **_pcts(lat), "qps": len(lat) / dt,
+                 "mean_batch": round(st["mean_batch"], 2),
+                 "batches": st["batches"]})
+    return rows
+
+
+def main() -> None:
+    for r in serve_bench():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,13 +18,20 @@ Hardware is data, not constants: :mod:`repro.hw` holds one serializable
 system, and a sweep can fan out over a ``hardware`` axis.  The convenience
 constants re-exported below (``DDR4_1866`` …) are built from those registry
 entries; their former homes (``repro.core.fpga.DDR4_1866``,
-``repro.core.hbm.TPU_V5E``) are one-release ``DeprecationWarning`` aliases.
+``repro.core.hbm.TPU_V5E``) completed their one-release deprecation cycle
+and are removed — use ``repro.hw.get(name)`` views instead.
 
 Million-point design spaces stream instead of materializing:
 ``sess.sweep(repro.Space.grid(...).stream(), chunk_size=65536)`` enumerates
 points lazily, evaluates fixed-shape chunks (sharded across local devices
 on the ``jax-jit`` backend) and folds them into online Pareto/top-k/stats
 reducers, so peak memory is O(chunk + front + k) at any sweep size.
+
+Interactive advisor traffic goes through the serving layer:
+``sess.serve()`` returns a :class:`Server` that micro-batches concurrent
+``estimate`` calls from any number of threads into single batched scoring
+passes (bit-equal to serial evaluation), memoizes results in a
+content-hash LRU, and reports p50/p99 latency via ``stats()``.
 
 Everything else (``repro.core.*``, ``repro.kernels.*``, ``repro.launch.*``)
 is implementation; the pre-PR-3 module-level entry points
@@ -42,7 +49,11 @@ from repro.api import (
     Design,
     Estimate,
     Report,
+    RequestTimeout,
     RooflineReport,
+    Server,
+    ServerClosed,
+    ServerOverloaded,
     Session,
     Space,
     SweepReport,
@@ -64,13 +75,15 @@ from repro.hw import ClockDomain, DramOrganization, Hardware, MemorySystem
 
 TPU_V5E = hw.get("tpu_v5e").tpu_params()
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     # the unified API
     "Design", "Session", "Space", "Estimate", "Report",
     "SweepReport", "AutotuneReport", "ValidateReport", "RooflineReport",
     "BACKENDS",
+    # the serving layer
+    "Server", "ServerClosed", "ServerOverloaded", "RequestTimeout",
     # the hardware-spec layer
     "hw", "Hardware", "MemorySystem", "DramOrganization", "ClockDomain",
     # design vocabulary (paper Tables I-III)

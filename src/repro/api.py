@@ -22,7 +22,9 @@ parameters and calibration were specified.  This module consolidates them:
   the TPU transplant), a calibration factor, and a compute backend
   (``scalar`` | ``numpy-batch`` | ``jax-jit``).  Every pipeline stage is a
   method: ``estimate``, ``sweep``, ``autotune``, ``validate``,
-  ``roofline``, ``predict``.
+  ``roofline``, ``predict`` — and ``serve`` turns the session into a
+  long-lived concurrent query service (:class:`repro.core.serving.Server`:
+  micro-batched scoring, content-hash LRU result cache, p50/p99 stats).
 * :class:`Estimate` and the :class:`Report` family — one shared result
   vocabulary across all of those stages (``rows()`` / ``to_csv()`` /
   ``summary()``), instead of today's per-module dataclasses.
@@ -58,6 +60,15 @@ from repro.hw import get as _hw_get
 
 #: Supported Session compute backends, in increasing batch-friendliness.
 BACKENDS = ("scalar", "numpy-batch", "jax-jit")
+
+__all__ = [
+    "BACKENDS",
+    "Design", "Space", "Session",
+    "Estimate", "Report", "SweepReport", "AutotuneReport", "ValidateReport",
+    "RooflineReport",
+    # the serving layer (Session.serve) and its failure vocabulary
+    "Server", "ServerClosed", "ServerOverloaded", "RequestTimeout",
+]
 
 #: LSU types whose stride axis is live (mirrors apps.microbench semantics).
 _STRIDE_TYPES = (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED, LsuType.BC_CACHE)
@@ -315,6 +326,7 @@ class Estimate:
     backend: str = "scalar"
     design: "Design | None" = None
     per_lsu: tuple = ()
+    cached: bool = False          # True when served from a Server's LRU
 
     @property
     def effective_bandwidth(self) -> float:
@@ -1081,6 +1093,34 @@ class Session:
         return _pred.predict_step(hlo_text, cost, self.hw,
                                   gather_row_bytes=gather_row_bytes)
 
+    # -- serving ------------------------------------------------------------
+
+    def serve(self, *, max_batch: int = 64, max_wait_ms: float = 1.0,
+              cache_size: int = 4096, max_queue: int = 1024,
+              timeout_ms: float | None = None) -> "Server":
+        """This session as a long-lived concurrent query service.
+
+        Returns a :class:`Server` whose ``estimate``/``submit``/``predict``
+        calls are safe from any number of threads: a background batcher
+        collects up to ``max_batch`` concurrent requests (lingering at most
+        ``max_wait_ms`` for a partial batch), scores them in one batched
+        pass — padded to fixed shapes on the jax-jit backend so the core
+        compiles once per shape — and scatters results back to per-request
+        futures, bit-equal to serial ``estimate`` calls.  A content-hash
+        LRU of ``cache_size`` results sits in front (hits return
+        immediately with ``Estimate.cached`` set); ``max_queue`` bounds the
+        backlog (beyond it submissions fast-fail with
+        :class:`ServerOverloaded`); ``timeout_ms`` is the default
+        per-request deadline.  Close with ``server.close()`` or use it as a
+        context manager; see ``server.stats()`` for hit/miss/latency
+        telemetry and ``benchmarks/serve_bench.py`` for the p50/p99 bench.
+        """
+        from repro.core.serving import Server
+
+        return Server(self, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                      cache_size=cache_size, max_queue=max_queue,
+                      timeout_ms=timeout_ms)
+
 
 # ---------------------------------------------------------------------------
 # jax-jit backend
@@ -1126,3 +1166,16 @@ def _jax_estimate_batch(batch: _mb.GroupBatch,
         out = jax.tree_util.tree_map(np.asarray, _JAX_FN(jb))
     groups = out.pop("groups")
     return _mb.BatchEstimate(**out, groups=groups)
+
+
+# ---------------------------------------------------------------------------
+# serving layer (implementation in repro.core.serving; surface is
+# Session.serve — imported last because serving's type hints point back here)
+# ---------------------------------------------------------------------------
+
+from repro.core.serving import (  # noqa: E402
+    RequestTimeout,
+    Server,
+    ServerClosed,
+    ServerOverloaded,
+)

@@ -1,4 +1,4 @@
-"""On-disk cache of compiled-HLO cost analyses, keyed by config hash.
+"""Caches keyed by content hash: on-disk HLO analyses + in-memory LRU.
 
 Lower+compile is the expensive step of model-guided search (seconds per
 candidate); the analytical scoring is microseconds.  Caching the *analysis*
@@ -10,6 +10,12 @@ concurrent autotune runs can share a cache directory.  The key is a SHA-256
 over a canonical JSON encoding of the configuration (plus a cache schema
 version and the jax version, since recompiling under a different compiler
 can change the counts).
+
+:class:`LruCache` is the in-memory layer above that disk cache: a bounded,
+thread-safe, recency-evicting map with hit/miss counters.  The serving
+layer (:mod:`repro.core.serving`) keys it with the same
+:func:`config_hash` to memoize whole estimate results per canonical
+``Design`` + hardware context.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ import json
 import os
 import pathlib
 import tempfile
+import threading
+from collections import OrderedDict
 from typing import Any, Mapping
 
 CACHE_VERSION = 1
@@ -36,6 +44,60 @@ def config_hash(obj: Any, *, salt: str = "") -> str:
     blob = json.dumps({"v": CACHE_VERSION, "salt": salt, "obj": obj},
                       sort_keys=True, default=repr)
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+class LruCache:
+    """Bounded, thread-safe, least-recently-used map with hit/miss counters.
+
+    ``get`` refreshes recency; ``put`` evicts the coldest entry past
+    ``capacity``.  Values are returned as stored (no copying) — callers
+    cache immutable records (frozen dataclasses, result tuples).  A
+    ``capacity`` of 0 disables storage but keeps counting misses, so a
+    cache-off server still reports honest stats.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity = int(capacity)
+        self._data: OrderedDict[str, Any] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str, default: Any = None) -> Any:
+        with self._lock:
+            try:
+                self._data.move_to_end(key)
+            except KeyError:
+                self.misses += 1
+                return default
+            self.hits += 1
+            return self._data[key]
+
+    def put(self, key: str, value: Any) -> None:
+        if self.capacity == 0:
+            return
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:          # membership does not refresh recency
+            return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def stats(self) -> dict:
+        return {"size": len(self._data), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses}
 
 
 class HloAnalysisCache:

@@ -60,33 +60,7 @@ class BspParams:
 
 
 # The module constants (DDR4_1866, DDR4_2666, DRAM_CONFIGS, STRATIX10_BSP)
-# moved to the registry-backed spec layer (repro.hw.presets); the names below
-# remain importable for one release as DeprecationWarning aliases built from
-# the registry entries.
-_DEPRECATED = {
-    "DDR4_1866": ("stratix10_ddr4_1866", "dram_params"),
-    "DDR4_2666": ("stratix10_ddr4_2666", "dram_params"),
-    "STRATIX10_BSP": ("stratix10_ddr4_1866", "bsp_params"),
-}
-
-
-def __getattr__(name: str):
-    from repro.deprecation import warn_deprecated
-
-    if name in _DEPRECATED:
-        from repro.hw import get as _get
-
-        preset, view = _DEPRECATED[name]
-        warn_deprecated(f"repro.core.fpga.{name}",
-                        f'repro.hw.get("{preset}").{view}()')
-        return getattr(_get(preset), view)()
-    if name == "DRAM_CONFIGS":
-        from repro.hw import get as _get
-
-        warn_deprecated("repro.core.fpga.DRAM_CONFIGS",
-                        'repro.hw.get("stratix10_ddr4_1866") / '
-                        '"stratix10_ddr4_2666"')
-        drams = [_get(p).dram_params()
-                 for p in ("stratix10_ddr4_1866", "stratix10_ddr4_2666")]
-        return {d.name: d for d in drams}
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+# moved to the registry-backed spec layer (repro.hw.presets) in 0.4, warned
+# as PEP-562 aliases through 0.5, and are gone as of 0.6 — read the views
+# off a registry entry instead: repro.hw.get("stratix10_ddr4_1866")
+# .dram_params() / .bsp_params() (or the curated repro.core re-exports).

@@ -78,17 +78,8 @@ def _as_tpu_params(hw) -> TpuParams:
 
 
 # TPU_V5E moved to the registry-backed spec layer (repro.hw.presets,
-# "tpu_v5e"); the name remains importable for one release as a
-# DeprecationWarning alias built from the registry entry.
-def __getattr__(name: str):
-    if name == "TPU_V5E":
-        from repro.deprecation import warn_deprecated
-        from repro.hw import get as _get
-
-        warn_deprecated("repro.core.hbm.TPU_V5E",
-                        'repro.hw.get("tpu_v5e").tpu_params()')
-        return _get("tpu_v5e").tpu_params()
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+# "tpu_v5e") in 0.4, warned as a PEP-562 alias through 0.5, and is gone as
+# of 0.6 — use repro.hw.get("tpu_v5e").tpu_params() (or repro.TPU_V5E).
 
 
 @dataclasses.dataclass(frozen=True)

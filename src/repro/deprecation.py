@@ -3,13 +3,14 @@
 PR 3 consolidated the five disjoint entry points (``model.estimate``,
 ``sweep.sweep_grid``/``sweep_random``, ``predictor.predict``,
 ``autotune.autotune``, ``validate.validate``) behind the unified
-:class:`repro.Design` / :class:`repro.Session` API; those shims completed
-their one-release cycle and are now removed.  The remaining users are the
-PR-4 hardware constant aliases (``repro.core.fpga.DDR4_1866`` … ,
-``repro.core.hbm.TPU_V5E``), which keep warning for one more release.
-Internal code routes through :mod:`repro.hw` directly so a
-``-W error::DeprecationWarning`` run stays clean (the CI import-surface
-check relies on that).
+:class:`repro.Design` / :class:`repro.Session` API, and PR 4 moved the
+hardware constants (``repro.core.fpga.DDR4_1866`` …,
+``repro.core.hbm.TPU_V5E``) into the :mod:`repro.hw` registry; both shim
+generations completed their one-release cycle and are removed (0.5 and
+0.6 respectively).  No deprecated name is currently exported — this
+module stays as the one channel future deprecations must use, so a
+``-W error::DeprecationWarning`` run stays clean by construction (the CI
+import-surface check relies on that).
 """
 from __future__ import annotations
 

@@ -11,9 +11,11 @@ composing :class:`MemorySystem` + :class:`DramOrganization` +
     >>> spec = hw.Hardware.from_json(saved)         # persisted calibration
 
 Presets: ``tpu_v5e``, ``tpu_v4``, ``stratix10_ddr4_1866``,
-``stratix10_ddr4_2666`` (see :mod:`repro.hw.presets`).  The deprecated
-module constants ``repro.core.fpga.DDR4_1866``/``STRATIX10_BSP`` and
-``repro.core.hbm.TPU_V5E`` are thin aliases over these entries.
+``stratix10_ddr4_2666`` (see :mod:`repro.hw.presets`).  The pre-0.4
+module constants (``repro.core.fpga.DDR4_1866``/``STRATIX10_BSP``,
+``repro.core.hbm.TPU_V5E``) are removed; these entries are their only
+home (the curated ``repro``/``repro.core`` re-exports are built from
+them).
 """
 from repro.hw.registry import get, names, register, unregister
 from repro.hw.spec import (

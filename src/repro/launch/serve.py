@@ -53,6 +53,13 @@ class BatchedServer:
         self.pos = np.full((batch_slots,), -1, np.int64)
         self.active: dict[int, Request] = {}
         self.pending: list[Request] = []
+        # prefill/decode accounting: prompt-feeding steps emit no tokens but
+        # burn the same decode-step latency, so lumping them into one wall
+        # clock deflates tokens/sec.  run() buckets every step by whether it
+        # produced a token; report decode throughput from decode_s only.
+        self.metrics = {"prefill_s": 0.0, "decode_s": 0.0,
+                        "prefill_steps": 0, "decode_steps": 0,
+                        "new_tokens": 0}
 
     # ------------------------------------------------------------ pool
     def submit(self, req: Request) -> None:
@@ -72,8 +79,12 @@ class BatchedServer:
             self._prefill_queue = getattr(self, "_prefill_queue", {})
             self._prefill_queue[slot] = list(req.prompt)
 
-    def step(self) -> None:
-        """One global decode step across all slots."""
+    def step(self) -> int:
+        """One global decode step across all slots.
+
+        Returns the number of tokens appended this step (0 for a pure
+        prefill step) so callers can bucket its wall time honestly.
+        """
         self._fill_slots()
         tokens = np.zeros((self.slots, 1), np.int32)
         for slot, req in self.active.items():
@@ -91,17 +102,20 @@ class BatchedServer:
             self.params, jnp.asarray(tokens), self.caches,
             jnp.asarray(index, jnp.int32))
         next_np = np.asarray(next_tok)
+        n_new = 0
         for slot, req in list(self.active.items()):
             self.pos[slot] += 1
             still_prefilling = bool(getattr(self, "_prefill_queue", {}).get(slot))
             if still_prefilling:
                 continue
             req.generated.append(int(next_np[slot, 0]))
+            n_new += 1
             if (len(req.generated) >= req.max_new
                     or self.pos[slot] >= self.max_len - 1):
                 req.done = True
                 del self.active[slot]
                 self.pos[slot] = -1
+        return n_new
 
     def run(self, requests: list[Request], *, max_steps: int = 10_000
             ) -> list[Request]:
@@ -109,8 +123,18 @@ class BatchedServer:
             self.submit(r)
         out = list(requests)
         steps = 0
+        m = self.metrics
         while (self.pending or self.active) and steps < max_steps:
-            self.step()
+            t0 = time.perf_counter()
+            n_new = self.step()
+            dt = time.perf_counter() - t0
+            if n_new:
+                m["decode_s"] += dt
+                m["decode_steps"] += 1
+                m["new_tokens"] += n_new
+            else:
+                m["prefill_s"] += dt
+                m["prefill_steps"] += 1
             steps += 1
         return out
 
@@ -138,12 +162,14 @@ def main() -> None:
                     prompt=rng.integers(0, cfg.vocab_size, 8).tolist(),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    t0 = time.time()
     server.run(reqs)
-    dt = time.time() - t0
+    m = server.metrics
     total_new = sum(len(r.generated) for r in reqs)
-    print(f"[serve] {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s)")
+    tok_s = total_new / m["decode_s"] if m["decode_s"] > 0 else 0.0
+    print(f"[serve] {len(reqs)} requests, {total_new} tokens: "
+          f"prefill {m['prefill_s']:.2f}s ({m['prefill_steps']} steps), "
+          f"decode {m['decode_s']:.2f}s ({m['decode_steps']} steps, "
+          f"{tok_s:.1f} tok/s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.generated[:8]}...")
 

@@ -102,6 +102,50 @@ def test_serve_generates_tokens():
     for r in reqs:
         assert len(r.generated) == 6
         assert all(0 <= t < cfg.padded_vocab for t in r.generated)
+    # timing-honesty regression: prompt-feeding steps are bucketed apart
+    # from token-producing steps, and every generated token is accounted
+    m = server.metrics
+    assert m["new_tokens"] == sum(len(r.generated) for r in reqs)
+    assert m["prefill_steps"] > 0 and m["prefill_s"] > 0.0
+    assert m["decode_steps"] > 0 and m["decode_s"] > 0.0
+
+
+def test_serve_metrics_exclude_prefill_from_decode_window():
+    """run() buckets pure-prefill steps out of the decode clock — the
+    tokens/sec denominator no longer includes steps that emit nothing.
+    (Accounting-only: step() is stubbed, no model or device work.)"""
+    import time as _time
+
+    from repro.launch.serve import BatchedServer
+
+    server = object.__new__(BatchedServer)       # skip heavy __init__
+    server.pending, server.active = [], {0: None}  # one live slot
+    server.metrics = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_steps": 0, "decode_steps": 0, "new_tokens": 0}
+    script = [0, 0, 0, 2, 2, 1]                  # 3 prefill, then 5 tokens
+    state = {"i": 0}
+
+    def fake_step():
+        _time.sleep(1e-3)
+        n = script[state["i"]]
+        state["i"] += 1
+        if state["i"] == len(script):
+            server.active.clear()
+        else:
+            server.active[0] = None              # keep the loop going
+        return n
+
+    server.step = fake_step
+    server.submit = lambda r: None
+    server.run([])
+    m = server.metrics
+    assert (m["prefill_steps"], m["decode_steps"]) == (3, 3)
+    assert m["new_tokens"] == 5
+    assert m["prefill_s"] > 0.0 and m["decode_s"] > 0.0
+    # the honest rate beats the wholesale one exactly because prefill
+    # time left the denominator
+    wholesale = m["new_tokens"] / (m["prefill_s"] + m["decode_s"])
+    assert m["new_tokens"] / m["decode_s"] > wholesale
 
 
 @pytest.mark.slow

@@ -1,5 +1,5 @@
 """The pluggable hardware-spec layer: registry, serialization, calibration
-fold-back, legacy-constant aliases, backend equivalence on a
+fold-back, legacy-constant removal, backend equivalence on a
 (Design x Hardware) grid, the sweep hardware axis, and the cache-key
 regression."""
 import dataclasses
@@ -124,31 +124,30 @@ class TestBuilders:
 
 
 class TestLegacyAliases:
-    """The scattered constants are one-release DeprecationWarning aliases."""
+    """The PR-4 alias shims completed their cycle and are gone as of 0.6:
+    the old names raise AttributeError; the registry views (and the curated
+    repro/repro.core re-exports built from them) are the replacement."""
 
     CASES = [
         ("repro.core.fpga", "DDR4_1866", "stratix10_ddr4_1866", "dram_params"),
         ("repro.core.fpga", "DDR4_2666", "stratix10_ddr4_2666", "dram_params"),
+        ("repro.core.fpga", "DRAM_CONFIGS", "stratix10_ddr4_1866",
+         "dram_params"),
         ("repro.core.fpga", "STRATIX10_BSP", "stratix10_ddr4_1866",
          "bsp_params"),
         ("repro.core.hbm", "TPU_V5E", "tpu_v5e", "tpu_params"),
     ]
 
     @pytest.mark.parametrize("mod,attr,preset,view", CASES)
-    def test_alias_warns_and_matches_registry(self, mod, attr, preset, view):
+    def test_alias_removed_and_registry_replaces(self, mod, attr, preset,
+                                                 view):
         import importlib
 
         module = importlib.import_module(mod)
-        with pytest.warns(DeprecationWarning, match="repro.hw"):
-            value = getattr(module, attr)
-        assert value == getattr(hw.get(preset), view)()
-
-    def test_dram_configs_alias(self):
-        import repro.core.fpga as fpga
-
-        with pytest.warns(DeprecationWarning):
-            cfgs = fpga.DRAM_CONFIGS
-        assert sorted(cfgs) == ["DDR4-1866", "DDR4-2666"]
+        with pytest.raises(AttributeError, match=attr):
+            getattr(module, attr)
+        # the documented replacement resolves
+        assert getattr(hw.get(preset), view)() is not None
 
     def test_curated_surfaces_warning_free(self):
         """repro / repro.core / repro.hw re-exports never touch the shims."""
