@@ -25,6 +25,20 @@ notice; that shared-core case is tracked by the recorded absolute numbers
 in the artifact but cannot be hard-gated without a model-independent
 machine probe.
 
+The distributed executor gates on the ``stream_dist`` rows:
+
+* correctness invariant, judged in-run: every row's ``agree`` flag (the
+  coordinator/worker merge is bit-equal to the single-process fold by
+  contract) must be true — a false flag is a merge bug, never a machine
+  artifact, and fails unconditionally;
+* scaling invariant, judged in-run: when the fresh run had >= 4 cores
+  (``cpus``), 4 workers must deliver >= 2x the points/sec of 1 worker —
+  on smaller runners the invariant is vacuous and only recorded;
+* ratchet vs the committed baseline: per workers-count points/sec more
+  than ``TOLERANCE`` below the committed value fails, unless the in-run
+  ``workers=1`` control row slowed past the same tolerance too (slower
+  machine, not an executor regression).
+
 The serving layer gates the same way on the ``serve_smoke`` rows:
 
 * machine-independent invariant, judged in-run: the hot-cache p99 must
@@ -71,6 +85,77 @@ def baseline_pps(payload: dict) -> float | None:
 def serve_rows(payload: dict) -> dict[str, dict]:
     rows = (payload.get("details") or {}).get("serve_smoke") or []
     return {r["scenario"]: r for r in rows}
+
+
+def dist_rows(payload: dict) -> dict[int, dict]:
+    rows = (payload.get("details") or {}).get("stream_dist") or []
+    return {int(r["workers"]): r for r in rows}
+
+
+def check_dist(fresh_payload: dict, base_payload: dict | None,
+               failures: list[str]) -> None:
+    """Gate the distributed-executor rows (see module docstring)."""
+    fresh = dist_rows(fresh_payload)
+    if not fresh:
+        print("bench gate: dist: no stream_dist rows in fresh artifact — "
+              "skipped")
+        return
+    # 1. in-run correctness invariant: bit-equality can never regress
+    for w, row in sorted(fresh.items()):
+        if not row.get("agree", False):
+            failures.append(
+                f"stream_dist[w{w}]: distributed != single-process fold "
+                f"(bit-equality contract broken)")
+    # 2. in-run scaling invariant, meaningful only with the cores to scale
+    one, four = fresh.get(1), fresh.get(4)
+    if one and four:
+        cpus = int(four.get("cpus", 0))
+        p1 = float(one["points_per_sec"])
+        p4 = float(four["points_per_sec"])
+        if cpus >= 4:
+            if p4 >= 2.0 * p1:
+                print(f"bench gate: stream_dist: w4 {p4:,.0f} pps >= 2x w1 "
+                      f"{p1:,.0f} pps on {cpus} cores -> OK")
+            else:
+                failures.append(
+                    f"stream_dist: w4 {p4:,.0f} pps is under 2x w1 "
+                    f"{p1:,.0f} pps on a {cpus}-core runner")
+        else:
+            print(f"bench gate: stream_dist: scaling invariant vacuous on "
+                  f"{cpus} core(s) (w4/w1 = {p4 / p1:.2f}x) — recorded only")
+    # 3. ratchet vs the committed baseline, with the w1 control row
+    base = dist_rows(base_payload) if base_payload else {}
+    if not base:
+        print("bench gate: stream_dist: no committed baseline — passing "
+              "(first run records it)")
+        return
+    b1, f1 = base.get(1), fresh.get(1)
+    machine_slow = (
+        b1 is not None and f1 is not None
+        and float(f1["points_per_sec"])
+        < (1.0 - TOLERANCE) * float(b1["points_per_sec"]))
+    for w, row in sorted(fresh.items()):
+        ref = base.get(w)
+        if ref is None:
+            print(f"bench gate: stream_dist[w{w}]: no committed baseline — "
+                  f"skipped")
+            continue
+        got = float(row["points_per_sec"])
+        want = float(ref["points_per_sec"])
+        floor = (1.0 - TOLERANCE) * want
+        if got >= floor:
+            print(f"bench gate: stream_dist[w{w}]: {got:,.0f} pps vs "
+                  f"committed {want:,.0f} pps (floor {floor:,.0f}) -> OK")
+        elif w != 1 and machine_slow:
+            print(f"bench gate: stream_dist[w{w}]: {got:,.0f} pps below "
+                  f"the {floor:,.0f} floor, but the w1 control slowed past "
+                  f"tolerance too — slower machine, not an executor "
+                  f"regression -> OK")
+        else:
+            failures.append(
+                f"stream_dist[w{w}]: {got:,.0f} pps is >{TOLERANCE:.0%} "
+                f"below the committed {want:,.0f} pps"
+                + ("" if w == 1 else " without a matching w1 slowdown"))
 
 
 def check_serve(fresh_payload: dict, base_payload: dict | None,
@@ -146,6 +231,7 @@ def main() -> int:
 
     failures: list[str] = []
     check_serve(fresh_payload, base_payload, failures)
+    check_dist(fresh_payload, base_payload, failures)
 
     base = stream_rows(base_payload) if base_payload else {}
     committed_base = baseline_pps(base_payload) if base_payload else None

@@ -9,7 +9,8 @@ Usage:
 
 ``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
 Fig. 5 stride, a reduced design-space sweep, the 1M-point streaming
-sweep whose per-backend points/sec + peak RSS feed the CI perf gate, and
+sweep whose per-backend points/sec + peak RSS feed the CI perf gate,
+the distributed-sweep scaling bench at 1/2/4 process workers, and
 the 32-client serving-latency bench whose p50/p99 feed the CI latency
 gate) and,
 with ``--out``, writes the full results as a JSON artifact for CI upload.  ``--out json``
@@ -100,6 +101,13 @@ def main() -> None:
         details["stream_1m"] = rows
         summary.append(("stream_1m", us, _derive("stream_1m", rows)))
 
+        # distributed streaming sweep: the same 1M-point grid through the
+        # coordinator/worker process pool at 1/2/4 workers (points/sec +
+        # agreement with the single-process fold — the scaling-gate entry).
+        rows, us = PT.timed(lambda: SB.stream_dist(session=session))
+        details["stream_dist"] = rows
+        summary.append(("stream_dist", us, _derive("stream_dist", rows)))
+
         # serving layer: 32 concurrent clients against Session.serve() —
         # hot (cache-warm interactive) p50/p99 latency vs the single-request
         # baseline, plus cold micro-batched throughput (the latency-gate
@@ -187,6 +195,12 @@ def _derive(name: str, rows: list[dict]) -> str:
                  f"{r['peak_rss_mb']:.0f}MB" for r in rows]
         agree = all(r["agree_1e6"] for r in rows)
         return f"points={rows[0]['n_points']} {' '.join(parts)} agree={agree}"
+    if name == "stream_dist":
+        parts = [f"w{r['workers']}={r['points_per_sec']:,.0f}pps"
+                 f"(x{r['speedup_vs_1worker']})" for r in rows]
+        agree = all(r["agree"] for r in rows)
+        return (f"points={rows[0]['n_points']} {' '.join(parts)} "
+                f"agree={agree} cpus={rows[0]['cpus']}")
     if name == "serve_smoke":
         by = {r["scenario"]: r for r in rows}
         single, hot, cold = by["single"], by["serve_hot"], by["serve_cold"]

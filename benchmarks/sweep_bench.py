@@ -344,6 +344,156 @@ def _hw_registered(name: str) -> bool:
     return name in hwreg.names()
 
 
+# -- distributed streaming (coordinator/worker process pool) ----------------
+
+def _cpus() -> int:
+    import os
+
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:      # pragma: no cover — non-Linux
+        return os.cpu_count() or 1
+
+
+def _dist_once(sess: Session, axes: dict, workers: int, chunk_size: int,
+               k: int) -> dict:
+    """One warmed, timed ``executor='processes'`` sweep -> result record.
+
+    The warmup sweeps a one-point grid through the same executor so the
+    timed run excludes nothing but steady-state work (spawn + import cost
+    per worker is real distributed overhead and *is* included — each timed
+    sweep pays it, exactly as a fresh coordinator would)."""
+    from repro.core.stream import default_reducers
+    from repro.core.sweep import _as_list
+
+    space = Space.grid(**axes)
+    warmup = Space.grid(**{name: _as_list(v)[:1] for name, v in axes.items()})
+    sess.sweep(warmup, chunk_size=chunk_size)   # score-path warmup only
+    t0 = time.perf_counter()
+    rep = sess.sweep(space, chunk_size=chunk_size,
+                     reducers=default_reducers(k),
+                     executor="processes", workers=workers)
+    dt = time.perf_counter() - t0
+    return {
+        "n_points": rep.n_points,
+        "seconds": dt,
+        "front_ids": np.sort(
+            np.asarray(rep.point_ids)[rep.pareto()]).tolist(),
+        "top_rows": rep.top_k(k),
+        "stats": {
+            "n_points": rep.stats["n_points"],
+            "memory_bound_points": rep.stats["memory_bound_points"],
+            "t_exe_min": rep.stats["t_exe_min"],
+        },
+    }
+
+
+def _dist_worker(workers: int, chunk_size: int, k: int,
+                 hw_name: str) -> None:
+    """Subprocess entry: one distributed sweep at ``workers``, print JSON."""
+    import json
+
+    sess = Session()
+    if hw_name != "-":
+        import repro.hw as hwreg
+
+        sess = sess.with_hardware(hwreg.get(hw_name))
+    rec = _dist_once(sess, _stream_axes_for(sess), workers, chunk_size, k)
+    print(json.dumps(rec))
+
+
+def _run_dist_worker(workers: int, chunk_size: int, k: int,
+                     hw_name: str) -> dict:
+    import json
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(root / "src"), env.get("PYTHONPATH")) if p)
+    warn_args = [a for opt in sys.warnoptions for a in ("-W", opt)]
+    out = subprocess.run(
+        [sys.executable, *warn_args, "-m", "benchmarks.sweep_bench",
+         "--dist-worker", str(workers), str(chunk_size), str(k), hw_name],
+        capture_output=True, text=True, cwd=root, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"dist worker (workers={workers}) failed:\n"
+                           f"{out.stderr[-3000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def stream_dist(axes: dict | None = None, *, chunk_size: int = 1 << 17,
+                workers_list=(1, 2, 4), k: int = 10,
+                session: Session | None = None) -> list[dict]:
+    """Distributed-sweep scaling: points/sec at 1/2/4 process workers.
+
+    Each workers count runs the full >= 1M-point numpy-batch grid through
+    ``executor="processes"`` in its *own coordinator subprocess* (so no
+    measurement inherits another's page cache or import state), and every
+    run's front ids / top-k rows / stats must agree with the in-process
+    single-threaded streaming reference — the distributed path is bit-equal
+    by construction, so ``agree`` failing means a real merge bug, and
+    bench_gate.py fails the build on it.  ``cpus`` records the cores the
+    coordinator could schedule on: scaling claims (and the bench_gate
+    scaling invariant) only mean something when ``cpus >= workers``.
+    """
+    sess0 = (session or Session()).with_backend("numpy-batch")
+    hw_name = sess0.hardware.name if sess0.hardware is not None else "-"
+    import repro.hw as hwreg
+
+    if hw_name != "-":
+        reconstructable = (_hw_registered(hw_name)
+                           and sess0 == Session().with_hardware(
+                               hwreg.get(hw_name)).with_backend("numpy-batch"))
+    else:
+        reconstructable = sess0 == Session().with_backend("numpy-batch")
+    isolate = axes is None and reconstructable
+    axes = dict(axes) if axes is not None else _stream_axes_for(sess0)
+
+    # In-process single-threaded streaming fold: the agreement reference.
+    from repro.core.stream import default_reducers
+
+    ref = sess0.sweep(Space.grid(**axes), chunk_size=chunk_size,
+                      reducers=default_reducers(k), workers=1)
+    ref_front = np.sort(np.asarray(ref.point_ids)[ref.pareto()]).tolist()
+    ref_top = ref.top_k(k)
+    ref_stats = {
+        "n_points": ref.stats["n_points"],
+        "memory_bound_points": ref.stats["memory_bound_points"],
+        "t_exe_min": ref.stats["t_exe_min"],
+    }
+
+    rows = []
+    base_pps = None
+    for w in workers_list:
+        if isolate:
+            rec = _run_dist_worker(w, chunk_size, k, hw_name)
+        else:
+            rec = _dist_once(sess0, axes, w, chunk_size, k)
+        agree = (rec["front_ids"] == ref_front
+                 and rec["top_rows"] == ref_top      # bit-equal contract
+                 and rec["stats"] == ref_stats)
+        pps = rec["n_points"] / rec["seconds"]
+        if base_pps is None:
+            base_pps = pps
+        rows.append({
+            "backend": "numpy-batch",
+            "executor": "processes",
+            "workers": w,
+            "n_points": rec["n_points"],
+            "chunk_size": chunk_size,
+            "seconds": round(rec["seconds"], 3),
+            "points_per_sec": round(pps, 1),
+            "speedup_vs_1worker": round(pps / base_pps, 2),
+            "agree": bool(agree),
+            "cpus": _cpus(),
+        })
+    return rows
+
+
 def main() -> None:
     import sys
 
@@ -352,10 +502,16 @@ def main() -> None:
         backend, chunk_size, k, hw_name = argv[1:5]
         _stream_worker(backend, int(chunk_size), int(k), hw_name)
         return
+    if argv[:1] == ["--dist-worker"]:
+        workers, chunk_size, k, hw_name = argv[1:5]
+        _dist_worker(int(workers), int(chunk_size), int(k), hw_name)
+        return
     rows = sweep_speedup()
     for row in rows:
         print(", ".join(f"{k}={v}" for k, v in row.items()))
     for row in stream_bench():
+        print(", ".join(f"{k}={v}" for k, v in row.items()))
+    for row in stream_dist():
         print(", ".join(f"{k}={v}" for k, v in row.items()))
 
 

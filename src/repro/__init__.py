@@ -27,6 +27,13 @@ points lazily, evaluates fixed-shape chunks (sharded across local devices
 on the ``jax-jit`` backend) and folds them into online Pareto/top-k/stats
 reducers, so peak memory is O(chunk + front + k) at any sweep size.
 
+Streaming sweeps also distribute: ``sess.sweep(space,
+executor="processes", workers=4)`` partitions the grid into chunk-aligned
+id ranges, fans them out over a spawn-based process pool (each worker
+rebuilds its evaluator from the picklable :class:`SweepPlan`), re-issues
+stragglers, and merges reducer states into a report bit-equal to the
+single-process run (:mod:`repro.core.distributed`).
+
 Interactive advisor traffic goes through the serving layer:
 ``sess.serve()`` returns a :class:`Server` that micro-batches concurrent
 ``estimate`` calls from any number of threads into single batched scoring
@@ -45,6 +52,7 @@ This module imports NumPy only; jax loads lazily, on first use of the
 from repro import hw
 from repro.api import (
     BACKENDS,
+    EXECUTORS,
     AutotuneReport,
     Design,
     Estimate,
@@ -56,6 +64,7 @@ from repro.api import (
     ServerOverloaded,
     Session,
     Space,
+    SweepPlan,
     SweepReport,
     ValidateReport,
 )
@@ -75,13 +84,13 @@ from repro.hw import ClockDomain, DramOrganization, Hardware, MemorySystem
 
 TPU_V5E = hw.get("tpu_v5e").tpu_params()
 
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 __all__ = [
     # the unified API
     "Design", "Session", "Space", "Estimate", "Report",
-    "SweepReport", "AutotuneReport", "ValidateReport", "RooflineReport",
-    "BACKENDS",
+    "SweepPlan", "SweepReport", "AutotuneReport", "ValidateReport",
+    "RooflineReport", "BACKENDS", "EXECUTORS",
     # the serving layer
     "Server", "ServerClosed", "ServerOverloaded", "RequestTimeout",
     # the hardware-spec layer

@@ -53,6 +53,7 @@ from repro.core import model as _model
 from repro.core import model_batch as _mb
 from repro.core import sweep as _sweep
 from repro.core.fpga import BspParams, DramParams
+from repro.core.stream import SweepPlan
 from repro.core.hbm import TpuParams
 from repro.core.lsu import Lsu, LsuType, make_global_access
 from repro.hw import DEFAULT_BOARD, DEFAULT_CHIP, Hardware
@@ -62,13 +63,17 @@ from repro.hw import get as _hw_get
 BACKENDS = ("scalar", "numpy-batch", "jax-jit")
 
 __all__ = [
-    "BACKENDS",
-    "Design", "Space", "Session",
+    "BACKENDS", "EXECUTORS",
+    "Design", "Space", "Session", "SweepPlan",
     "Estimate", "Report", "SweepReport", "AutotuneReport", "ValidateReport",
     "RooflineReport",
     # the serving layer (Session.serve) and its failure vocabulary
     "Server", "ServerClosed", "ServerOverloaded", "RequestTimeout",
 ]
+
+#: Supported Session.sweep executors: the in-process chunk pipeline and the
+#: coordinator/worker process pool (repro.core.distributed).
+EXECUTORS = ("threads", "processes")
 
 #: LSU types whose stride axis is live (mirrors apps.microbench semantics).
 _STRIDE_TYPES = (LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED, LsuType.BC_CACHE)
@@ -489,6 +494,9 @@ class SweepReport(_sweep.SweepResult, Report):
         than returning a confidently wrong row.  The default reducers
         always keep it.
         """
+        if self.n_points == 0:
+            raise ValueError("the swept space is empty (n_points == 0); "
+                             "there is no best design point")
         if self.is_streaming and len(self.resource) == 0:
             raise ValueError(
                 "streaming report holds no survivor rows (stats-only "
@@ -521,7 +529,8 @@ class SweepReport(_sweep.SweepResult, Report):
             "n_points": self.n_points,
             "memory_bound_points": int(np.asarray(self.memory_bound).sum()),
             "pareto_points": int(len(self.pareto())),
-            "t_exe_min_ms": float(np.min(self.t_exe)) * 1e3,
+            "t_exe_min_ms": (float(np.min(self.t_exe)) * 1e3
+                             if self.n_points else math.inf),
         }
 
 
@@ -805,12 +814,21 @@ class Session:
             return []
         if self.backend == "scalar":
             return [self.estimate(d) for d in designs]
+        est = self._estimator()(self._batch_for(designs))
+        return self._rows_from(est, designs)
+
+    def _batch_for(self, designs: Sequence[Design]) -> _mb.GroupBatch:
+        """One GroupBatch over heterogeneous designs (session hw defaults
+        applied) — shared by ``estimate_many`` and the serving batcher."""
         hw = [self._hw_for(d) for d in designs]
-        batch = _mb.GroupBatch.from_kernels(
+        return _mb.GroupBatch.from_kernels(
             [list(d.lsus) for d in designs],
             [h[0] for h in hw], [h[1] for h in hw],
             f=[d.f for d in designs])
-        est = self._estimator()(batch)
+
+    def _rows_from(self, est: _mb.BatchEstimate,
+                   designs: Sequence[Design]) -> list[Estimate]:
+        """Batch rows back out as calibrated per-design Estimates."""
         return [_estimate_row(est, i, backend=self.backend,
                               scale=self.calibration_factor,
                               design=designs[i])
@@ -818,9 +836,55 @@ class Session:
 
     # -- sweep --------------------------------------------------------------
 
+    @staticmethod
+    def _as_space(space: "Space | Mapping[str, Any] | None",
+                  axes: Mapping[str, Any]) -> "Space":
+        """Normalize the (space | mapping | keyword axes) calling forms."""
+        if space is None:
+            return Space.grid(**axes)
+        if axes:
+            raise TypeError("pass either a Space/mapping or keyword axes, "
+                            "not both")
+        if isinstance(space, Mapping):
+            return Space.grid(**space)
+        return space
+
+    def plan(self, space: "Space | Mapping[str, Any] | None" = None, *,
+             chunk_size: int | None = None, **axes) -> SweepPlan:
+        """A frozen, picklable :class:`SweepPlan` for streaming this space.
+
+        The plan is the data-only description of what ``sweep`` would
+        stream — normalized axis lists (session hardware defaulted in),
+        backend, calibration factor and chunk size — and rebuilds its
+        chunk evaluator in any process (``plan.evaluator()``), which is
+        how the ``executor="processes"`` coordinator ships work to
+        spawn-based workers.  ``plan.to_json()`` round-trips it through
+        text.  Only grid spaces plan: a random space materializes its
+        draws.
+        """
+        space = self._as_space(space, axes)
+        if not space.is_grid:
+            raise TypeError("streaming sweeps need a grid space; "
+                            "Space.random materializes its draws")
+        chunk = chunk_size if chunk_size is not None else space.chunk_size
+        chunk = int(chunk) if chunk is not None else DEFAULT_CHUNK
+        if self.backend == "jax-jit":
+            from repro import compat as _compat
+
+            ndev = _compat.local_device_count()
+            if ndev > 1:
+                # fixed shapes must tile the device mesh exactly
+                chunk = -(-chunk // ndev) * ndev
+        return SweepPlan(
+            lists=space.lists(dram=self.dram, bsp=self.bsp),
+            backend=self.backend,
+            calibration_factor=self.calibration_factor,
+            chunk_size=chunk)
+
     def sweep(self, space: "Space | Mapping[str, Any] | None" = None, *,
               chunk_size: int | None = None, reducers=None,
-              workers: int | None = None, **axes) -> SweepReport:
+              workers: int | None = None, executor: str = "threads",
+              **axes) -> SweepReport:
         """Score a whole design space through this session's backend.
 
         Accepts a :class:`Space`, a plain axes mapping (treated as a grid),
@@ -834,30 +898,53 @@ class Session:
         into online reducers — by default a running Pareto front, a
         ``top_k(10)`` selection and exact summary stats — so a 10M-point
         grid sweeps in O(chunk + front + k) memory.  ``reducers`` takes
-        :mod:`repro.core.stream` reducer instances to change what is kept;
-        ``workers`` sizes the chunk thread pool on the numpy-batch backend.
+        :mod:`repro.core.stream` reducer instances to change what is kept.
+
+        ``executor`` picks how streaming chunks are driven:
+
+        * ``"threads"`` (default) — the in-process pipeline; ``workers``
+          sizes the chunk thread pool on the numpy-batch backend (the
+          jax-jit backend already shards chunks across devices, and the
+          scalar reference loop is GIL-bound — both reject ``workers > 1``
+          here);
+        * ``"processes"`` — the coordinator/worker process pool
+          (:mod:`repro.core.distributed`): the grid is partitioned into
+          chunk-aligned id ranges, ``workers`` spawn-based processes each
+          rebuild the evaluator from the picklable :class:`SweepPlan`,
+          stragglers are re-issued, and the merged report is bit-equal to
+          the single-process run on every backend.
         """
-        if space is None:
-            space = Space.grid(**axes)
-        elif axes:
-            raise TypeError("pass either a Space/mapping or keyword axes, "
-                            "not both")
-        if isinstance(space, Mapping):
-            space = Space.grid(**space)
-        chunk = chunk_size if chunk_size is not None else space.chunk_size
-        if chunk is None and (reducers is not None or workers is not None):
-            chunk = DEFAULT_CHUNK      # both options imply streaming
-        if workers is not None and workers > 1 \
-                and self.backend != "numpy-batch":
+        space = self._as_space(space, axes)
+        if executor not in EXECUTORS:
             raise ValueError(
-                "workers applies to the numpy-batch backend only (jax-jit "
-                "shards chunks across devices; scalar is the reference "
-                "loop)")
+                f"unknown executor {executor!r}: pick 'threads' (in-process "
+                f"chunk pipeline) or 'processes' (coordinator/worker "
+                f"process pool)")
+        if workers is not None and workers < 1:
+            raise ValueError("workers must be >= 1")
+        if executor == "threads" and workers is not None and workers > 1:
+            if self.backend == "jax-jit":
+                raise ValueError(
+                    "workers > 1 under executor='threads' does not apply to "
+                    "the jax-jit backend (it already shards chunks across "
+                    "local devices); use executor='processes' to fan out "
+                    "across process workers")
+            if self.backend == "scalar":
+                raise ValueError(
+                    "workers > 1 under executor='threads' cannot speed up "
+                    "the scalar backend (the reference loop is GIL-bound); "
+                    "use executor='processes' to fan out across process "
+                    "workers")
+        chunk = chunk_size if chunk_size is not None else space.chunk_size
+        if chunk is None and (reducers is not None or workers is not None
+                              or executor == "processes"):
+            chunk = DEFAULT_CHUNK      # these options all imply streaming
         if chunk is not None:
             if not space.is_grid:
                 raise TypeError("streaming sweeps need a grid space; "
                                 "Space.random materializes its draws")
-            return self._sweep_stream(space, int(chunk), reducers, workers)
+            return self._sweep_stream(space, int(chunk), reducers, workers,
+                                      executor)
         points, n, cats = space.points(dram=self.dram, bsp=self.bsp)
         if self.backend == "scalar":
             result = self._sweep_scalar(points, n, cats)
@@ -882,82 +969,30 @@ class Session:
 
     def _sweep_scalar(self, points: dict, n: int, cats: dict,
                       ) -> _sweep.SweepResult:
-        """Reference scalar loop over the same points `_build` would score.
-
-        Each point expands through ``apps.microbench`` (the proven-equal
-        scalar path); the hardware axis and inert axes are resolved exactly
-        like ``_build`` so the reported configurations match across
-        backends.  The readable per-point object columns the loop consumes
-        are gathered here from the coded ``cats`` — the scalar backend is
-        the only per-point-object consumer left.
-        """
-        points = {name: (points[name] if name in points
-                         else _sweep._object_array(cats[name][0])[
-                             cats[name][1]])
-                  for name in _sweep.AXES}   # canonical column order
-        points, hw_scale = _sweep._apply_hardware_axis(points, n)
-        lsu_types = [points["lsu_type"][i] for i in range(n)]
-        is_atomic = np.array([t is LsuType.ATOMIC_PIPELINED
-                              for t in lsu_types])
-        is_ack = np.array([t is LsuType.BC_WRITE_ACK for t in lsu_types])
-        points = _sweep._normalize_inert_axes(points, is_atomic, is_ack)
-        delta = points["delta"]
-        val_constant = points["val_constant"]
-        include_write = points["include_write"]
-
-        cols = {k: np.empty(n) for k in
-                ("t_exe", "t_ideal", "t_ovh", "bound_ratio", "total_bytes")}
-        memory_bound = np.empty(n, dtype=bool)
-        n_lsu = np.empty(n, dtype=np.int64)
-        resource = np.empty(n)
-        for i in range(n):
-            design = Design.microbench(
-                lsu_types[i],
-                n_ga=int(points["n_ga"][i]),
-                simd=int(points["simd"][i]),
-                n_elems=int(points["n_elems"][i]),
-                delta=int(delta[i]),
-                elem_bytes=int(points["elem_bytes"][i]),
-                include_write=bool(include_write[i]),
-                val_constant=bool(val_constant[i]),
-                dram=points["dram"][i], bsp=points["bsp"][i])
-            ke = _model._estimate(list(design.lsus), design.dram, design.bsp,
-                                  f=design.f)
-            cols["t_exe"][i] = ke.t_exe * hw_scale[i]
-            cols["t_ideal"][i] = ke.t_ideal * hw_scale[i]
-            cols["t_ovh"][i] = ke.t_ovh * hw_scale[i]
-            cols["bound_ratio"][i] = ke.bound_ratio
-            cols["total_bytes"][i] = ke.total_bytes
-            memory_bound[i] = ke.memory_bound
-            n_lsu[i] = len(ke.per_lsu)
-            resource[i] = design.resource_bytes
-        est = _mb.BatchEstimate(
-            t_exe=cols["t_exe"], t_ideal=cols["t_ideal"],
-            t_ovh=cols["t_ovh"], bound_ratio=cols["bound_ratio"],
-            memory_bound=memory_bound, total_bytes=cols["total_bytes"],
-            n_lsu=n_lsu, groups={})
-        return _sweep.SweepResult(points=points, estimate=est,
-                                  resource=resource)
+        """Reference scalar loop (moved to ``sweep._score_scalar`` so the
+        picklable :class:`SweepPlan` can rebuild it without a session)."""
+        return _sweep._score_scalar(points, n, cats)
 
     # -- streaming sweep ----------------------------------------------------
 
     def _sweep_stream(self, space: "Space", chunk_size: int, reducers,
-                      workers: int | None) -> SweepReport:
+                      workers: int | None,
+                      executor: str = "threads") -> SweepReport:
         """Chunked, reducer-folded evaluation of a grid space.
 
-        Peak memory is O(chunk + front + k): chunks are decoded from point
-        ids (integer codes only — no object arrays), scored through the
-        same ``_score`` core as the materialized path, calibrated exactly
-        like it, and folded into the reducers.  Survivor rows (front +
-        top-k) are the only points materialized into the report.
+        A thin consumer of :class:`SweepPlan`: the plan carries the
+        normalized axes + backend + calibration + chunk size, its
+        ``evaluator()`` scores chunks (same ``_score`` core and calibration
+        as the materialized path), and the reducers fold them — in this
+        process (``threads``) or across the coordinator/worker pool
+        (``processes``).  Peak memory is O(chunk + front + k); survivor
+        rows (front + top-k) are the only points materialized.
         """
-        from repro.core import stream as _stream
-
         import copy
 
-        lists = space.lists(dram=self.dram, bsp=self.bsp)
-        enum = _stream.GridEnumerator(lists)
-        n = enum.n
+        from repro.core import stream as _stream
+
+        plan = self.plan(space, chunk_size=chunk_size)
         if reducers is None:
             reducers = _stream.default_reducers()
         else:
@@ -968,65 +1003,20 @@ class Session:
         if not any(isinstance(r, _stream.StatsReducer) for r in reducers):
             reducers += (_stream.StatsReducer(),)
 
-        estimator = None
-        if self.backend == "jax-jit":
-            from repro import compat as _compat
+        if executor == "processes":
+            from repro.core import distributed as _dist
 
-            ndev = _compat.local_device_count()
-            sharding = None
-            if ndev > 1:
-                # fixed shapes must tile the device mesh exactly
-                chunk_size = -(-chunk_size // ndev) * ndev
-                sharding = _compat.data_sharding(ndev)
-            estimator = (lambda b: _jax_estimate_batch(b, sharding=sharding))
-        elif self.backend == "numpy-batch":
-            estimator = _mb.estimate_batch
-            if workers is None:
+            outcome = _dist.run_distributed(plan, reducers, workers=workers)
+        else:
+            w = workers
+            if w is None and self.backend == "numpy-batch":
                 import os
 
-                workers = min(4, os.cpu_count() or 1)
-        cat_names = [a for a in _sweep.AXES if a in _sweep._CATEGORICAL]
-        num_names = [a for a in _sweep.AXES if a not in _sweep._CATEGORICAL]
-        # The resolved categorical tables (dram/bsp extended with the
-        # hardware-axis views) depend only on the axis value lists, so the
-        # chunk-local codes index one table layout computed once up front.
-        probe = {k: (lists[k], np.zeros(1, dtype=np.int64))
-                 for k in cat_names}
-        tables = {k: v[0] for k, v in
-                  _sweep._resolve_hardware_codes(probe, 1)[0].items()}
-        c = self.calibration_factor
-
-        def eval_chunk(ids: np.ndarray) -> dict[str, np.ndarray]:
-            m = len(ids)
-            codes = enum.codes(ids)
-            numeric = {k: np.asarray(lists[k])[codes[k]] for k in num_names}
-            cats = {k: (lists[k], codes[k]) for k in cat_names}
-            if self.backend == "scalar":
-                result = self._sweep_scalar(dict(numeric), m, cats)
-                est, resource = result.estimate, result.resource
-                numeric = {k: result.points[k] for k in num_names}
-                cats, _, own = _sweep._resolve_hardware_codes(cats, m)
-            else:
-                est, resource, cats, numeric, own = _sweep._score(
-                    numeric, cats, m, estimator)
-            cols: dict[str, np.ndarray] = {"id": ids}
-            for k in num_names:
-                cols[k] = np.asarray(numeric[k])
-            for k in cat_names:
-                cols[k] = np.asarray(cats[k][1], dtype=np.int64)
-            scale = np.where(own, c, 1.0) if c != 1.0 else None
-            for name in _stream.ESTIMATE_COLUMNS:
-                v = np.asarray(getattr(est, name))
-                if scale is not None and name in ("t_exe", "t_ideal", "t_ovh"):
-                    v = v * scale       # session calibration, like sweep()
-                cols[name] = v
-            cols["resource"] = np.asarray(resource)
-            return cols
-
-        outcome = _stream.run_stream(
-            n, chunk_size, eval_chunk, reducers,
-            workers=workers if self.backend == "numpy-batch" else None)
-        return _stream_report(outcome, tables, backend=self.backend)
+                w = min(4, os.cpu_count() or 1)
+            outcome = _stream.run_stream(
+                plan.n, plan.chunk_size, plan.evaluator(), reducers,
+                workers=w if self.backend == "numpy-batch" else None)
+        return _stream_report(outcome, plan.tables(), backend=self.backend)
 
     # -- backend plumbing ---------------------------------------------------
 

@@ -296,6 +296,69 @@ class Server:
             self._cache.put(key, out)
         return out
 
+    def sweep(self, space=None, *, chunk_size: int | None = None,
+              reducers=None, executor: str = "threads",
+              workers: int | None = None, **axes):
+        """Design-space sweep behind the serving front door.
+
+        Same calling surface as :meth:`repro.api.Session.sweep` (including
+        ``executor="processes"`` for the coordinator/worker pool), plus the
+        server's result cache: a grid space canonicalizes to its
+        :class:`~repro.core.stream.SweepPlan` JSON, so repeat queries for
+        the same space under the same session context return the finished
+        :class:`~repro.api.SweepReport` without re-scoring, and identical
+        sweeps *in flight* coalesce onto one run.  Custom ``reducers``
+        (mutable instances) and ``Space.random`` spaces run uncached.
+        """
+        if self._closed:
+            raise ServerClosed("server is closed")
+        sp = self.session._as_space(space, axes)
+
+        def run():
+            return self.session.sweep(sp, chunk_size=chunk_size,
+                                      reducers=reducers, workers=workers,
+                                      executor=executor)
+
+        if reducers is not None:
+            return run()        # reducer instances carry uncanonical state
+        try:
+            plan = self.session.plan(sp, chunk_size=chunk_size)
+        except TypeError:
+            return run()        # non-grid space: no canonical plan to key on
+        # Streaming and materialized reports answer different queries (held
+        # rows vs the whole space), so the mode is part of the key even
+        # though it never changes the numbers.
+        streaming = (chunk_size is not None or sp.chunk_size is not None
+                     or workers is not None or executor == "processes")
+        key = config_hash({"plan": plan.to_json(), "streaming": streaming},
+                          salt="sweep-" + self._salt)
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                return hit
+            shared = self._inflight.get(key)
+            if shared is None:
+                fut: Future = Future()
+                self._inflight[key] = fut
+        if shared is not None:
+            with self._lock:
+                self._counters["coalesced"] += 1
+            return shared.result()
+        try:
+            report = run()
+        except BaseException as exc:
+            with self._lock:
+                if self._inflight.get(key) is fut:
+                    self._inflight.pop(key, None)
+            fut.set_exception(exc)
+            raise
+        with self._lock:
+            self._cache.put(key, report)
+            if self._inflight.get(key) is fut:
+                self._inflight.pop(key, None)
+        fut.set_result(report)
+        return report
+
     # -- lifecycle ----------------------------------------------------------
 
     def drain(self, timeout_s: float | None = None) -> None:
@@ -467,20 +530,13 @@ class Server:
             return self.session.estimate_many(list(designs))
         from repro import api as _api
 
-        hw = [self.session._hw_for(d) for d in designs]
-        batch = _mb.GroupBatch.from_kernels(
-            [list(d.lsus) for d in designs],
-            [h[0] for h in hw], [h[1] for h in hw],
-            f=[d.f for d in designs])
+        batch = self.session._batch_for(designs)
         m = len(np.asarray(batch.kernel))
         padded = pad_group_batch(
             batch, self.max_batch + 1,     # +1: a home for padding groups
             _next_pow2(max(m, self.max_batch)))
         est = _api._jax_estimate_batch(padded)
-        return [_api._estimate_row(est, i, backend=self.session.backend,
-                                   scale=self.session.calibration_factor,
-                                   design=designs[i])
-                for i in range(len(designs))]
+        return self.session._rows_from(est, designs)
 
     # -- helpers ------------------------------------------------------------
 

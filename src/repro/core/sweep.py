@@ -452,6 +452,69 @@ def _score(numeric: dict[str, np.ndarray],
     return est, resource, cats, numeric, own
 
 
+def _score_scalar(points: dict, n: int,
+                  cats: dict[str, tuple[list, np.ndarray]]) -> SweepResult:
+    """Reference scalar loop over the same points :func:`_score` would score.
+
+    Each point expands through ``apps.microbench`` (the proven-equal scalar
+    path) and is estimated by the readable per-LSU model
+    (:func:`repro.core.model._estimate`); the hardware axis and inert axes
+    are resolved exactly like ``_score`` so the reported configurations
+    match across backends.  A free function of its inputs only — no
+    session state — so :class:`repro.core.stream.SweepPlan` can rebuild
+    the scalar backend in a fresh worker process.
+    """
+    from repro.core import apps as _apps
+    from repro.core import model as _model
+
+    points = {name: (points[name] if name in points
+                     else _object_array(cats[name][0])[cats[name][1]])
+              for name in AXES}   # canonical column order
+    points, hw_scale = _apply_hardware_axis(points, n)
+    lsu_types = [points["lsu_type"][i] for i in range(n)]
+    is_atomic = np.array([t is LsuType.ATOMIC_PIPELINED
+                          for t in lsu_types], dtype=bool)
+    is_ack = np.array([t is LsuType.BC_WRITE_ACK for t in lsu_types],
+                      dtype=bool)
+    points = _normalize_inert_axes(points, is_atomic, is_ack)
+    delta = points["delta"]
+    val_constant = points["val_constant"]
+    include_write = points["include_write"]
+
+    cols = {k: np.empty(n) for k in
+            ("t_exe", "t_ideal", "t_ovh", "bound_ratio", "total_bytes")}
+    memory_bound = np.empty(n, dtype=bool)
+    n_lsu = np.empty(n, dtype=np.int64)
+    resource = np.empty(n)
+    for i in range(n):
+        simd = int(points["simd"][i])
+        lsus = _apps.microbench(
+            lsu_types[i],
+            n_ga=int(points["n_ga"][i]),
+            simd=simd,
+            n_elems=int(points["n_elems"][i]),
+            delta=int(delta[i]),               # inert axes normalized above
+            elem_bytes=int(points["elem_bytes"][i]),
+            include_write=bool(include_write[i]),
+            val_constant=bool(val_constant[i]))
+        ke = _model._estimate(list(lsus), points["dram"][i], points["bsp"][i],
+                              f=simd)
+        cols["t_exe"][i] = ke.t_exe * hw_scale[i]
+        cols["t_ideal"][i] = ke.t_ideal * hw_scale[i]
+        cols["t_ovh"][i] = ke.t_ovh * hw_scale[i]
+        cols["bound_ratio"][i] = ke.bound_ratio
+        cols["total_bytes"][i] = ke.total_bytes
+        memory_bound[i] = ke.memory_bound
+        n_lsu[i] = len(ke.per_lsu)
+        resource[i] = sum(l.ls_width for l in lsus if l.lsu_type.is_global)
+    est = _mb.BatchEstimate(
+        t_exe=cols["t_exe"], t_ideal=cols["t_ideal"],
+        t_ovh=cols["t_ovh"], bound_ratio=cols["bound_ratio"],
+        memory_bound=memory_bound, total_bytes=cols["total_bytes"],
+        n_lsu=n_lsu, groups={})
+    return SweepResult(points=points, estimate=est, resource=resource)
+
+
 def _materialize_points(numeric: dict[str, np.ndarray],
                         cats: dict[str, tuple[list, np.ndarray]],
                         ) -> dict[str, np.ndarray]:

@@ -133,9 +133,14 @@ class TestGridEnumerator:
         for name, (table, idx) in cats.items():
             np.testing.assert_array_equal(sub[name], idx[some])
 
-    def test_empty_axis_rejected(self):
-        with pytest.raises(ValueError, match="empty"):
-            GridEnumerator({"a": [1, 2], "b": []})
+    def test_empty_axis_yields_empty_grid(self):
+        """An empty axis makes the grid empty, not invalid: n == 0 and
+        codes of an empty id batch decode to empty columns."""
+        enum = GridEnumerator({"a": [1, 2], "b": []})
+        assert enum.n == 0
+        codes = enum.codes(np.empty(0, dtype=np.int64))
+        assert set(codes) == {"a", "b"}
+        assert all(len(v) == 0 for v in codes.values())
 
 
 def _synthetic_cols(n, seed=0):
