@@ -50,6 +50,17 @@ The serving layer gates the same way on the ``serve_smoke`` rows:
   row slowed past the same tolerance too (slower machine, not a serving
   regression).
 
+The gradient-based optimizer gates on the ``optimize_1m`` row:
+
+* correctness invariants, judged in-run and machine-independent: the
+  optimizer's best point must *bit-match* the exhaustive grid optimum
+  (``matched_optimum``), recover >= 95% of the reference Pareto front
+  (``front_recall``), and spend under 1% of the grid in model
+  evaluations (``evals_fraction``) — any miss fails unconditionally;
+* ratchet vs the committed baseline: the search is seeded and its
+  evaluation count deterministic, so ``n_evals`` more than ``TOLERANCE``
+  above the committed value fails with no machine excuse.
+
 A missing baseline entry (first run after the feature lands, or a renamed
 backend/scenario) passes with a notice — the gate ratchets only what is
 recorded.  The committed baseline should be refreshed (re-run the smoke
@@ -158,6 +169,52 @@ def check_dist(fresh_payload: dict, base_payload: dict | None,
                 + ("" if w == 1 else " without a matching w1 slowdown"))
 
 
+def optimize_row(payload: dict) -> dict | None:
+    rows = (payload.get("details") or {}).get("optimize_1m") or []
+    return rows[0] if rows else None
+
+
+def check_optimize(fresh_payload: dict, base_payload: dict | None,
+                   failures: list[str]) -> None:
+    """Gate the gradient-based search row (see module docstring)."""
+    row = optimize_row(fresh_payload)
+    if row is None:
+        print("bench gate: optimize: no optimize_1m row in fresh artifact — "
+              "skipped")
+        return
+    # 1. in-run invariants — machine-independent, never excused
+    if not row.get("matched_optimum", False):
+        failures.append("optimize_1m: best point does not bit-match the "
+                        "exhaustive grid optimum")
+    recall = float(row.get("front_recall", 0.0))
+    if recall < 0.95:
+        failures.append(f"optimize_1m: front recall {recall:.2%} is below "
+                        f"the 95% floor")
+    frac = float(row.get("evals_fraction", 1.0))
+    if frac >= 0.01:
+        failures.append(f"optimize_1m: {frac:.2%} of the grid evaluated — "
+                        f"the <1% budget invariant failed")
+    if not failures or all(not f.startswith("optimize_1m") for f in failures):
+        print(f"bench gate: optimize_1m: matched_optimum "
+              f"recall={recall:.2%} evals={frac:.2%} of grid -> OK")
+    # 2. ratchet on the deterministic evaluation count
+    base = optimize_row(base_payload) if base_payload else None
+    if base is None:
+        print("bench gate: optimize_1m: no committed baseline — passing "
+              "(first run records it)")
+        return
+    got, want = int(row["n_evals"]), int(base["n_evals"])
+    ceiling = (1.0 + TOLERANCE) * want
+    if got <= ceiling:
+        print(f"bench gate: optimize_1m: {got} evals vs committed {want} "
+              f"(ceiling {ceiling:.0f}) -> OK")
+    else:
+        failures.append(
+            f"optimize_1m: {got} evals is >{TOLERANCE:.0%} above the "
+            f"committed {want} (the search is seeded — this is a real "
+            f"efficiency regression)")
+
+
 def check_serve(fresh_payload: dict, base_payload: dict | None,
                 failures: list[str]) -> None:
     """Gate the serving-latency rows (see module docstring)."""
@@ -232,6 +289,7 @@ def main() -> int:
     failures: list[str] = []
     check_serve(fresh_payload, base_payload, failures)
     check_dist(fresh_payload, base_payload, failures)
+    check_optimize(fresh_payload, base_payload, failures)
 
     base = stream_rows(base_payload) if base_payload else {}
     committed_base = baseline_pps(base_payload) if base_payload else None

@@ -108,6 +108,13 @@ def main() -> None:
         details["stream_dist"] = rows
         summary.append(("stream_dist", us, _derive("stream_dist", rows)))
 
+        # gradient-based search vs the exhaustive grid: Session.optimize
+        # must bit-match the 1M-point optimum and recover the Pareto front
+        # while evaluating <1% of the points (the optimize-gate entry).
+        rows, us = PT.timed(lambda: SB.optimize_1m(session=session))
+        details["optimize_1m"] = rows
+        summary.append(("optimize_1m", us, _derive("optimize_1m", rows)))
+
         # serving layer: 32 concurrent clients against Session.serve() —
         # hot (cache-warm interactive) p50/p99 latency vs the single-request
         # baseline, plus cold micro-batched throughput (the latency-gate
@@ -201,6 +208,13 @@ def _derive(name: str, rows: list[dict]) -> str:
         agree = all(r["agree"] for r in rows)
         return (f"points={rows[0]['n_points']} {' '.join(parts)} "
                 f"agree={agree} cpus={rows[0]['cpus']}")
+    if name == "optimize_1m":
+        r = rows[0]
+        return (f"points={r['n_points']} evals={r['n_evals']} "
+                f"({100 * r['evals_fraction']:.2f}%) "
+                f"matched_optimum={r['matched_optimum']} "
+                f"front_recall={r['front_recall']} "
+                f"speedup_vs_full_grid={r['speedup_vs_full_grid']}x")
     if name == "serve_smoke":
         by = {r["scenario"]: r for r in rows}
         single, hot, cold = by["single"], by["serve_hot"], by["serve_cold"]

@@ -338,6 +338,61 @@ def stream_bench(axes: dict | None = None, *, chunk_size: int = 1 << 17,
     return rows
 
 
+def optimize_1m(axes: dict | None = None, *, max_evals: int | None = None,
+                seed: int = 0, chunk_size: int = 1 << 17, k: int = 10,
+                session: Session | None = None) -> list[dict]:
+    """``Session.optimize`` vs the exhaustive 1,024,000-point grid.
+
+    Runs the full streaming sweep once (the ground truth: exact t_exe
+    minimum + the (t_exe, resource) Pareto front), then the gradient-based
+    optimizer in 2-objective mode, and reports whether the optimizer's
+    best point *bit-matches* the grid optimum, what fraction of the
+    reference front it recovered exactly, and how many model evaluations
+    it paid — the telemetry behind the <1%-of-points claim the CI gate
+    enforces.  Both paths score through the identical plan evaluator, so
+    "match" means float64 bit-equality, not a tolerance.
+    """
+    from repro.core.stream import ParetoReducer, StatsReducer, default_reducers
+
+    sess = (session or Session()).with_backend("numpy-batch")
+    axes = dict(axes) if axes is not None else _stream_axes_for(sess)
+    space = Space.grid(**axes)
+
+    t0 = time.perf_counter()
+    full = sess.sweep(space, chunk_size=chunk_size,
+                      reducers=default_reducers(k))
+    dt_full = time.perf_counter() - t0
+    n = full.stats["n_points"]
+    ref_min = full.stats["t_exe_min"]
+    fr = full.pareto()
+    ref_front = {(float(np.asarray(full.estimate.t_exe)[i]),
+                  float(np.asarray(full.resource)[i])) for i in fr}
+
+    t0 = time.perf_counter()
+    rep = sess.optimize(space, objective=("t_exe", "resource"),
+                        max_evals=max_evals, seed=seed)
+    dt_opt = time.perf_counter() - t0
+
+    got_front = {(float(rep.front["t_exe"][i]),
+                  float(rep.front["resource"][i]))
+                 for i in range(rep.n_front)}
+    recall = len(ref_front & got_front) / max(1, len(ref_front))
+    return [{
+        "n_points": n,
+        "n_evals": rep.n_evals,
+        "n_grid_evals": rep.n_grid_evals,
+        "n_relaxed_evals": rep.n_relaxed_evals,
+        "evals_fraction": round(rep.evals_fraction, 6),
+        "seconds": round(dt_opt, 3),
+        "full_grid_seconds": round(dt_full, 3),
+        "speedup_vs_full_grid": round(dt_full / dt_opt, 2),
+        "matched_optimum": bool(rep.best.t_exe == ref_min),
+        "front_recall": round(recall, 4),
+        "ref_front_size": len(ref_front),
+        "opt_front_size": rep.n_front,
+    }]
+
+
 def _hw_registered(name: str) -> bool:
     import repro.hw as hwreg
 

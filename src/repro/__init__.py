@@ -34,6 +34,15 @@ rebuilds its evaluator from the picklable :class:`SweepPlan`), re-issues
 stragglers, and merges reducer states into a report bit-equal to the
 single-process run (:mod:`repro.core.distributed`).
 
+Search does not have to enumerate at all: every :class:`Hardware` preset
+carries a :class:`ResourceEnvelope` budget, ``sess.sweep(space,
+constraints=[board.envelope])`` feasibility-masks each streaming chunk
+*before* scoring (bit-equal to post-filtering the unconstrained sweep),
+and ``sess.optimize(space, objective=("t_exe", "resource"))`` finds the
+grid optimum / Pareto front by relaxing the integer axes and descending
+the differentiable model — typically evaluating under 1% of the grid
+(:mod:`repro.search`).
+
 Interactive advisor traffic goes through the serving layer:
 ``sess.serve()`` returns a :class:`Server` that micro-batches concurrent
 ``estimate`` calls from any number of threads into single batched scoring
@@ -81,10 +90,18 @@ from repro.core.fpga import BspParams, DramParams
 from repro.core.hbm import AccessClass, TpuParams
 from repro.core.lsu import Lsu, LsuType, make_global_access
 from repro.hw import ClockDomain, DramOrganization, Hardware, MemorySystem
+# The constrained/gradient-based search layer (repro.search is lazy: these
+# resolve through its PEP 562 __getattr__ after repro.api is fully loaded).
+from repro.search import (
+    Constraint,
+    OptimizeReport,
+    ResourceEnvelope,
+    within,
+)
 
 TPU_V5E = hw.get("tpu_v5e").tpu_params()
 
-__version__ = "0.7.0"
+__version__ = "0.8.0"
 
 __all__ = [
     # the unified API
@@ -93,6 +110,8 @@ __all__ = [
     "RooflineReport", "BACKENDS", "EXECUTORS",
     # the serving layer
     "Server", "ServerClosed", "ServerOverloaded", "RequestTimeout",
+    # constrained + gradient-based search
+    "ResourceEnvelope", "Constraint", "within", "OptimizeReport",
     # the hardware-spec layer
     "hw", "Hardware", "MemorySystem", "DramOrganization", "ClockDomain",
     # design vocabulary (paper Tables I-III)

@@ -298,15 +298,24 @@ class Space:
         axes.setdefault("bsp", bsp)
         return _sweep._normalize_axes(axes)
 
-    def points(self, *, dram: DramParams, bsp: BspParams,
+    def points(self, *, dram: DramParams, bsp: BspParams, constraints=(),
                ) -> tuple[dict[str, np.ndarray], int, dict]:
-        """Materialize per-point axis arrays, defaulting hardware axes."""
+        """Materialize per-point axis arrays, defaulting hardware axes.
+
+        For a random space, ``constraints`` switches to seeded rejection
+        sampling: every returned point is feasible, and an empty (or
+        near-empty) feasible region raises instead of spinning or emitting
+        infeasible points.  Grid spaces ignore ``constraints`` here — the
+        sweep path masks the enumerated grid itself, so it can report the
+        feasible/candidate split.
+        """
         axes = dict(self.axes)
         axes.setdefault("dram", dram)
         axes.setdefault("bsp", bsp)
         if self.is_grid:
             return _sweep._grid_points(axes)
-        return _sweep._random_points(self.n, self.seed, axes)
+        return _sweep._random_points(self.n, self.seed, axes,
+                                     constraints=tuple(constraints))
 
 
 # ---------------------------------------------------------------------------
@@ -428,6 +437,8 @@ class SweepReport(_sweep.SweepResult, Report):
     topk_key: str | None = None
     reducers: tuple | None = None     # the folded reducer instances —
     # custom Reducer subclasses read their accumulated state back here
+    # -- constraint telemetry (None on an unconstrained sweep) -------------
+    n_candidates: int | None = None   # points enumerated before feasibility
     kind = "sweep"
 
     @property
@@ -495,6 +506,11 @@ class SweepReport(_sweep.SweepResult, Report):
         always keep it.
         """
         if self.n_points == 0:
+            if self.n_candidates:
+                raise ValueError(
+                    f"constraints eliminated every point: 0 of "
+                    f"{self.n_candidates} candidates feasible; relax the "
+                    f"constraints or widen the space")
             raise ValueError("the swept space is empty (n_points == 0); "
                              "there is no best design point")
         if self.is_streaming and len(self.resource) == 0:
@@ -516,7 +532,7 @@ class SweepReport(_sweep.SweepResult, Report):
 
     def summary(self) -> dict:
         if self.is_streaming:
-            return {
+            out = {
                 "kind": self.kind, "backend": self.backend,
                 "n_points": int(self.stats["n_points"]),
                 "memory_bound_points": int(self.stats["memory_bound_points"]),
@@ -524,23 +540,35 @@ class SweepReport(_sweep.SweepResult, Report):
                                      if self.front_idx is not None else 0),
                 "t_exe_min_ms": float(self.stats["t_exe_min"]) * 1e3,
             }
-        return {
-            "kind": self.kind, "backend": self.backend,
-            "n_points": self.n_points,
-            "memory_bound_points": int(np.asarray(self.memory_bound).sum()),
-            "pareto_points": int(len(self.pareto())),
-            "t_exe_min_ms": (float(np.min(self.t_exe)) * 1e3
-                             if self.n_points else math.inf),
-        }
+        else:
+            out = {
+                "kind": self.kind, "backend": self.backend,
+                "n_points": self.n_points,
+                "memory_bound_points": int(
+                    np.asarray(self.memory_bound).sum()),
+                "pareto_points": int(len(self.pareto())
+                                     if self.n_points else 0),
+                "t_exe_min_ms": (float(np.min(self.t_exe)) * 1e3
+                                 if self.n_points else math.inf),
+            }
+        if self.n_candidates is not None:
+            # the feasible/total split of a constrained sweep
+            out["n_candidates"] = int(self.n_candidates)
+            out["n_feasible"] = out["n_points"]
+        return out
 
 
 def _stream_report(outcome, tables: Mapping[str, list], *,
-                   backend: str) -> SweepReport:
+                   backend: str,
+                   n_candidates: int | None = None) -> SweepReport:
     """Fold a :class:`repro.core.stream.StreamOutcome` into a SweepReport.
 
     Survivors = union of the Pareto reducer's front and the top-k rows,
     deduplicated by point id and held in ascending id order; the front and
-    top-k index into those held rows.
+    top-k index into those held rows.  For a constrained sweep
+    (``n_candidates`` set) the reducers only ever saw feasible rows, so the
+    report's ``n_total`` is the stats reducer's exact feasible count, not
+    the enumerated grid size.
     """
     from repro.core import stream as _stream
 
@@ -586,7 +614,10 @@ def _stream_report(outcome, tables: Mapping[str, list], *,
     return SweepReport(
         points=points, estimate=est,
         resource=np.asarray(merged["resource"], dtype=np.float64),
-        backend=backend, n_total=outcome.n_points, stats=stats.summary(),
+        backend=backend,
+        n_total=(outcome.n_points if n_candidates is None
+                 else int(stats.n_points)),
+        n_candidates=n_candidates, stats=stats.summary(),
         point_ids=ids,
         front_idx=(np.searchsorted(ids, front.ids)
                    if front is not None else None),
@@ -850,17 +881,19 @@ class Session:
         return space
 
     def plan(self, space: "Space | Mapping[str, Any] | None" = None, *,
-             chunk_size: int | None = None, **axes) -> SweepPlan:
+             chunk_size: int | None = None, constraints=(),
+             **axes) -> SweepPlan:
         """A frozen, picklable :class:`SweepPlan` for streaming this space.
 
         The plan is the data-only description of what ``sweep`` would
         stream — normalized axis lists (session hardware defaulted in),
-        backend, calibration factor and chunk size — and rebuilds its
-        chunk evaluator in any process (``plan.evaluator()``), which is
-        how the ``executor="processes"`` coordinator ships work to
-        spawn-based workers.  ``plan.to_json()`` round-trips it through
-        text.  Only grid spaces plan: a random space materializes its
-        draws.
+        backend, calibration factor, chunk size and feasibility
+        ``constraints`` — and rebuilds its chunk evaluator in any process
+        (``plan.evaluator()``), which is how the ``executor="processes"``
+        coordinator ships work to spawn-based workers.  ``plan.to_json()``
+        round-trips it through text (custom callable constraints pickle
+        but do not JSON-encode).  Only grid spaces plan: a random space
+        materializes its draws.
         """
         space = self._as_space(space, axes)
         if not space.is_grid:
@@ -879,11 +912,13 @@ class Session:
             lists=space.lists(dram=self.dram, bsp=self.bsp),
             backend=self.backend,
             calibration_factor=self.calibration_factor,
-            chunk_size=chunk)
+            chunk_size=chunk,
+            constraints=constraints or ())
 
     def sweep(self, space: "Space | Mapping[str, Any] | None" = None, *,
               chunk_size: int | None = None, reducers=None,
               workers: int | None = None, executor: str = "threads",
+              constraints=(),
               **axes) -> SweepReport:
         """Score a whole design space through this session's backend.
 
@@ -913,8 +948,23 @@ class Session:
           rebuild the evaluator from the picklable :class:`SweepPlan`,
           stragglers are re-issued, and the merged report is bit-equal to
           the single-process run on every backend.
+
+        ``constraints`` (a :class:`repro.search.Constraint`, a
+        :class:`repro.search.ResourceEnvelope`, a ``callable(cols) ->
+        bool mask``, or a sequence of those) restricts the sweep to the
+        feasible region: grid points are feasibility-masked *before*
+        scoring (on the streaming path, chunk by chunk — infeasible
+        points are never evaluated), random spaces rejection-sample, and
+        the report's ``summary()`` carries the feasible/candidate split.
+        Results are bit-equal to post-filtering the unconstrained sweep.
         """
         space = self._as_space(space, axes)
+        if constraints:
+            from repro.search.constraints import normalize_constraints
+
+            constraints = normalize_constraints(constraints)
+        else:
+            constraints = ()
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}: pick 'threads' (in-process "
@@ -944,8 +994,28 @@ class Session:
                 raise TypeError("streaming sweeps need a grid space; "
                                 "Space.random materializes its draws")
             return self._sweep_stream(space, int(chunk), reducers, workers,
-                                      executor)
-        points, n, cats = space.points(dram=self.dram, bsp=self.bsp)
+                                      executor, constraints)
+        points, n, cats = space.points(dram=self.dram, bsp=self.bsp,
+                                       constraints=constraints)
+        n_candidates = None
+        if constraints and space.is_grid:
+            # Mask the enumerated grid before anything is scored; scoring
+            # is per-point independent, so this is bit-equal to scoring
+            # everything and filtering after.
+            from repro.search.constraints import (
+                columns_from_parts,
+                feasibility_mask,
+            )
+
+            mask = feasibility_mask(
+                constraints, columns_from_parts(points, cats, n))
+            n_candidates = n
+            points = {k: np.asarray(v)[mask] for k, v in points.items()}
+            cats = {k: (t, np.asarray(idx)[mask])
+                    for k, (t, idx) in cats.items()}
+            n = int(np.count_nonzero(mask))
+            if n == 0:
+                return self._empty_report(cats, n_candidates)
         if self.backend == "scalar":
             result = self._sweep_scalar(points, n, cats)
         else:
@@ -965,7 +1035,24 @@ class Session:
                 t_ideal=np.asarray(est.t_ideal) * c,
                 t_ovh=np.asarray(est.t_ovh) * c)
         return SweepReport(points=result.points, estimate=est,
-                           resource=result.resource, backend=self.backend)
+                           resource=result.resource, backend=self.backend,
+                           n_candidates=n_candidates)
+
+    def _empty_report(self, cats: dict,
+                      n_candidates: int | None) -> SweepReport:
+        """A zero-row materialized report (constraints ate every point)."""
+        points = {name: (_sweep._object_array([])
+                         if name in _sweep._CATEGORICAL else np.empty(0))
+                  for name in _sweep.AXES}
+        est = _mb.BatchEstimate(
+            t_exe=np.empty(0), t_ideal=np.empty(0), t_ovh=np.empty(0),
+            bound_ratio=np.empty(0),
+            memory_bound=np.empty(0, dtype=bool),
+            total_bytes=np.empty(0), n_lsu=np.empty(0, dtype=np.int64),
+            groups={})
+        return SweepReport(points=points, estimate=est,
+                           resource=np.empty(0), backend=self.backend,
+                           n_candidates=n_candidates)
 
     def _sweep_scalar(self, points: dict, n: int, cats: dict,
                       ) -> _sweep.SweepResult:
@@ -976,8 +1063,8 @@ class Session:
     # -- streaming sweep ----------------------------------------------------
 
     def _sweep_stream(self, space: "Space", chunk_size: int, reducers,
-                      workers: int | None,
-                      executor: str = "threads") -> SweepReport:
+                      workers: int | None, executor: str = "threads",
+                      constraints: tuple = ()) -> SweepReport:
         """Chunked, reducer-folded evaluation of a grid space.
 
         A thin consumer of :class:`SweepPlan`: the plan carries the
@@ -992,7 +1079,8 @@ class Session:
 
         from repro.core import stream as _stream
 
-        plan = self.plan(space, chunk_size=chunk_size)
+        plan = self.plan(space, chunk_size=chunk_size,
+                         constraints=constraints)
         if reducers is None:
             reducers = _stream.default_reducers()
         else:
@@ -1016,7 +1104,50 @@ class Session:
             outcome = _stream.run_stream(
                 plan.n, plan.chunk_size, plan.evaluator(), reducers,
                 workers=w if self.backend == "numpy-batch" else None)
-        return _stream_report(outcome, plan.tables(), backend=self.backend)
+        return _stream_report(
+            outcome, plan.tables(), backend=self.backend,
+            n_candidates=plan.n if plan.constraints else None)
+
+    # -- optimizer-driven search -------------------------------------------
+
+    def optimize(self, space: "Space | Mapping[str, Any] | None" = None, *,
+                 objective="t_exe", constraints=(), seed: int = 0,
+                 max_evals: int | None = None, n_starts: int = 2,
+                 steps: int = 16, screen: int | None = None,
+                 chunk_size: int | None = None, **axes):
+        """Search a grid space for the best design *without* enumerating it.
+
+        ``objective`` is an estimate/resource column to minimize (default
+        ``"t_exe"``), or a pair of columns — e.g. ``("t_exe",
+        "resource")`` — to approximate the 2-objective Pareto front.
+        ``constraints`` restricts the search to the feasible region
+        (same forms as ``sweep``); ``max_evals`` bounds how many grid
+        points may be scored (default ``max(1024, n // 128)`` — under 1%
+        of any large grid).
+
+        The strategy leans on the model being differentiable end to end:
+        a seeded feasible screen picks starting points; the integer axes
+        are relaxed to continuous and multi-start AdamW descends through
+        the jax-differentiable estimator (one lane per categorical
+        combination, envelope caps as smooth penalties); each continuous
+        optimum is then refined on its *discrete* neighborhood — and, in
+        Pareto mode, a Pareto local search walks ±1-step neighbors of the
+        running front — all through the same streaming evaluator a full
+        sweep would use, so every reported number is bit-comparable to
+        the exhaustive grid.  Requires jax for the descent phase; without
+        it the screen/refine phases still run.
+
+        Returns an :class:`repro.search.OptimizeReport` carrying the best
+        point, the evaluated front, per-phase trajectory and the
+        evals-used telemetry backing the <1%-of-points claim.
+        """
+        from repro.search.optimize import run_optimize
+
+        space = self._as_space(space, axes)
+        return run_optimize(
+            self, space, objective=objective, constraints=constraints,
+            seed=seed, max_evals=max_evals, n_starts=n_starts,
+            steps=steps, screen=screen, chunk_size=chunk_size)
 
     # -- backend plumbing ---------------------------------------------------
 

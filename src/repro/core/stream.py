@@ -91,6 +91,19 @@ class GridEnumerator:
         return {name: (ids // self.strides[i]) % self._mod[i]
                 for i, name in enumerate(self.names)}
 
+    def encode(self, codes: Mapping[str, np.ndarray]) -> np.ndarray:
+        """Point ids from per-axis index arrays (the inverse of ``codes``).
+
+        This is how the discrete refinement of ``Session.optimize`` maps a
+        neighborhood of axis indices back onto global point ids for the
+        streaming evaluator.
+        """
+        out = None
+        for i, name in enumerate(self.names):
+            term = np.asarray(codes[name], dtype=np.int64) * self.strides[i]
+            out = term if out is None else out + term
+        return out if out is not None else np.empty(0, dtype=np.int64)
+
 
 def _concat(held: dict[str, np.ndarray] | None,
             cols: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
@@ -520,8 +533,14 @@ def run_stream(
         starts = [starts[i] for i in chunk_order]
 
     def fold(cols: Mapping[str, np.ndarray], valid: int) -> None:
-        if valid != chunk_size:
+        # A constrained evaluator returns pre-compacted columns (feasible
+        # rows only) — it can only come back full-length when every point
+        # of a full chunk was feasible, so slicing off the padded tail is
+        # needed exactly when the columns still have the fixed shape.
+        if valid != chunk_size and len(cols["id"]) == chunk_size:
             cols = {k: np.asarray(v)[:valid] for k, v in cols.items()}
+        if len(cols["id"]) == 0:
+            return
         for r in reducers:
             r.update(cols)
 
@@ -631,6 +650,7 @@ class SweepPlan:
     backend: str = "numpy-batch"
     calibration_factor: float = 1.0
     chunk_size: int = 1 << 16
+    constraints: tuple = ()
 
     def __post_init__(self):
         from repro.core import sweep as _sweep
@@ -646,6 +666,13 @@ class SweepPlan:
                              f"missing {missing}")
         object.__setattr__(
             self, "lists", {k: tuple(self.lists[k]) for k in _sweep.AXES})
+        if self.constraints:
+            from repro.search.constraints import normalize_constraints
+
+            object.__setattr__(
+                self, "constraints", normalize_constraints(self.constraints))
+        else:
+            object.__setattr__(self, "constraints", ())
 
     # -- geometry -----------------------------------------------------------
 
@@ -661,6 +688,26 @@ class SweepPlan:
     def n_chunks(self) -> int:
         return -(-self.n // self.chunk_size)
 
+    def feasible_mask(self, ids: np.ndarray) -> np.ndarray:
+        """Boolean keep-mask of the plan's constraints over point ids.
+
+        A pure function of each point's own configuration — no scoring —
+        which is why masking a chunk *before* evaluation is bit-equal to
+        post-filtering the unconstrained sweep.  All-True when the plan
+        carries no constraints.
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if not self.constraints:
+            return np.ones(len(ids), dtype=bool)
+        from repro.search.constraints import (
+            columns_from_lists,
+            feasibility_mask,
+        )
+
+        enum = self.enumerator()
+        cols = columns_from_lists(self.lists, enum.codes(ids))
+        return feasibility_mask(self.constraints, cols)
+
     # -- evaluation ---------------------------------------------------------
 
     def evaluator(self) -> Callable[[np.ndarray], dict[str, np.ndarray]]:
@@ -671,6 +718,13 @@ class SweepPlan:
         compiles on first use, and on multi-device hosts shards each chunk
         across local devices whenever ``chunk_size`` tiles the device
         count.
+
+        When the plan carries constraints, each chunk is feasibility-masked
+        *before* scoring: the returned columns hold only the feasible rows
+        (possibly zero), already unpadded.  The jax-jit backend still sees
+        exactly one array shape — feasible ids are re-padded to the chunk
+        shape for scoring and sliced back down after — so constraints never
+        trigger recompilation.
         """
         from repro.core import sweep as _sweep
 
@@ -696,7 +750,7 @@ class SweepPlan:
 
             estimator = _mb.estimate_batch
 
-        def eval_chunk(ids: np.ndarray) -> dict[str, np.ndarray]:
+        def score_ids(ids: np.ndarray) -> dict[str, np.ndarray]:
             m = len(ids)
             codes = enum.codes(ids)
             numeric = {k: np.asarray(lists[k])[codes[k]] for k in num_names}
@@ -724,6 +778,43 @@ class SweepPlan:
                 cols[name] = v
             cols["resource"] = np.asarray(resource)
             return cols
+
+        if not self.constraints:
+            return score_ids
+
+        from repro.search.constraints import (
+            columns_from_lists,
+            feasibility_mask,
+        )
+
+        constraints = self.constraints
+        fixed_shape = backend == "jax-jit"
+
+        def eval_chunk(ids: np.ndarray) -> dict[str, np.ndarray]:
+            ids = np.asarray(ids, dtype=np.int64)
+            # Chunk ids are strictly increasing until the padded tail
+            # repeats the last valid id, so the first occurrence of the
+            # final id marks the valid length.
+            valid = int(np.searchsorted(ids, ids[-1])) + 1 if len(ids) else 0
+            live = ids[:valid]
+            mask = feasibility_mask(
+                constraints, columns_from_lists(lists, enum.codes(live)))
+            feas = live[mask]
+            f = len(feas)
+            if f == len(ids):
+                return score_ids(ids)
+            if fixed_shape:
+                # Re-pad to the compiled chunk shape (repeat an arbitrary
+                # in-range id when nothing is feasible), score, slice.
+                filler = feas[-1] if f else ids[0]
+                padded = np.concatenate(
+                    [feas, np.full(len(ids) - f, filler, dtype=np.int64)])
+                cols = score_ids(padded)
+            else:
+                # Variable shapes are free off-jit; score one throwaway row
+                # when empty so every column keeps its dtype.
+                cols = score_ids(feas if f else ids[:1])
+            return {k: np.asarray(v)[:f] for k, v in cols.items()}
 
         return eval_chunk
 
@@ -763,8 +854,13 @@ class SweepPlan:
         for start in range(lo, hi, self.chunk_size):
             ids, valid = _chunk_ids(start, n, self.chunk_size)
             cols = eval_chunk(ids)
-            if valid != self.chunk_size:
+            # Same rule as run_stream's fold: a constrained evaluator has
+            # already compacted to the feasible rows.
+            if valid != self.chunk_size \
+                    and len(cols["id"]) == self.chunk_size:
                 cols = {k: np.asarray(v)[:valid] for k, v in cols.items()}
+            if len(cols["id"]) == 0:
+                continue
             for r in reducers:
                 r.update(cols)
         return reducers
@@ -778,22 +874,39 @@ class SweepPlan:
     # -- serialization ------------------------------------------------------
 
     def to_json(self) -> str:
-        """The plan as canonical JSON (axis values via typed codecs)."""
-        return json.dumps({
+        """The plan as canonical JSON (axis values via typed codecs).
+
+        Constraints ride along as tagged dicts; a plan carrying a custom
+        callable constraint raises here (pickle still carries it).
+        """
+        out = {
             "version": 1,
             "backend": self.backend,
             "calibration_factor": self.calibration_factor,
             "chunk_size": self.chunk_size,
             "lists": {k: [_axis_value_to_json(v) for v in vs]
                       for k, vs in self.lists.items()},
-        }, sort_keys=True)
+        }
+        if self.constraints:
+            from repro.search.constraints import constraint_to_json
+
+            out["constraints"] = [constraint_to_json(c)
+                                  for c in self.constraints]
+        return json.dumps(out, sort_keys=True)
 
     @classmethod
     def from_json(cls, text: str) -> "SweepPlan":
         d = json.loads(text)
+        encoded = d.get("constraints", [])
+        constraints: tuple = ()
+        if encoded:
+            from repro.search.constraints import constraint_from_json
+
+            constraints = tuple(constraint_from_json(o) for o in encoded)
         return cls(
             lists={k: [_axis_value_from_json(v) for v in vs]
                    for k, vs in d["lists"].items()},
             backend=d["backend"],
             calibration_factor=float(d["calibration_factor"]),
-            chunk_size=int(d["chunk_size"]))
+            chunk_size=int(d["chunk_size"]),
+            constraints=constraints)

@@ -614,6 +614,7 @@ def _is_numeric_range(v) -> bool:
 
 
 def _random_points(n: int, seed: int, axes: Mapping[str, Any],
+                   constraints: tuple = (),
                    ) -> tuple[dict[str, np.ndarray], int,
                               dict[str, tuple[list, np.ndarray]]]:
     """Per-point axis arrays for ``n`` uniformly sampled design points.
@@ -626,26 +627,76 @@ def _random_points(n: int, seed: int, axes: Mapping[str, Any],
     ``simd``), so the sampled values stay inside the requested range
     whenever it contains any multiple of the point's simd — rounding to the
     global LCM of all sampled simd values could leave the range entirely.
+
+    With ``constraints``, sampling is seeded rejection: draw a batch, keep
+    the feasible rows (uniform over the feasible region, since rejection
+    preserves the base distribution), repeat until ``n`` points or a
+    bounded attempt budget runs out — then fail loudly instead of emitting
+    infeasible points or spinning forever on an empty feasible region.
     """
     rng = np.random.default_rng(seed)
     tuples = {k: v for k, v in axes.items()
               if k not in _CATEGORICAL and _is_numeric_range(v)}
     lists = _normalize_axes({k: v for k, v in axes.items() if k not in tuples})
 
-    points: dict[str, np.ndarray] = {}
-    cats: dict[str, tuple[list, np.ndarray]] = {}
-    for name in AXES:
-        if name in tuples:
-            lo, hi = tuples[name]
-            points[name] = rng.integers(int(lo), int(hi) + 1, size=n)
-        else:
-            vals = lists[name]
-            idx = rng.integers(0, len(vals), size=n)
-            if name in _CATEGORICAL:
-                cats[name] = (vals, idx)
+    def draw(m: int) -> tuple[dict[str, np.ndarray],
+                              dict[str, tuple[list, np.ndarray]]]:
+        points: dict[str, np.ndarray] = {}
+        cats: dict[str, tuple[list, np.ndarray]] = {}
+        for name in AXES:
+            if name in tuples:
+                lo, hi = tuples[name]
+                points[name] = rng.integers(int(lo), int(hi) + 1, size=m)
             else:
-                points[name] = np.asarray(vals)[idx]
-    simd = np.asarray(points["simd"], dtype=np.int64)
-    n_elems = np.asarray(points["n_elems"], dtype=np.int64)
-    points["n_elems"] = np.maximum((n_elems // simd) * simd, simd)
+                vals = lists[name]
+                idx = rng.integers(0, len(vals), size=m)
+                if name in _CATEGORICAL:
+                    cats[name] = (vals, idx)
+                else:
+                    points[name] = np.asarray(vals)[idx]
+        simd = np.asarray(points["simd"], dtype=np.int64)
+        n_elems = np.asarray(points["n_elems"], dtype=np.int64)
+        points["n_elems"] = np.maximum((n_elems // simd) * simd, simd)
+        return points, cats
+
+    if not constraints or n <= 0:
+        points, cats = draw(n)
+        return points, n, cats
+
+    from repro.search.constraints import (
+        columns_from_parts,
+        feasibility_mask,
+        normalize_constraints,
+    )
+
+    constraints = normalize_constraints(constraints)
+    batch = max(int(n), 1024)
+    budget = 256 * int(n) + 10_000          # total draws before giving up
+    drawn = found = 0
+    kept_points: list[dict[str, np.ndarray]] = []
+    kept_codes: list[dict[str, np.ndarray]] = []
+    tables: dict[str, list] = {}
+    while found < n and drawn < budget:
+        m = min(batch, budget - drawn)
+        points, cats = draw(m)
+        drawn += m
+        mask = feasibility_mask(
+            constraints, columns_from_parts(points, cats, m))
+        if not mask.any():
+            continue
+        kept_points.append({k: v[mask] for k, v in points.items()})
+        kept_codes.append({k: idx[mask] for k, (_, idx) in cats.items()})
+        tables = {k: vals for k, (vals, _) in cats.items()}
+        found += int(mask.sum())
+    if found < n:
+        region = ("appears empty" if found == 0
+                  else f"yielded only {found} of {n} requested points")
+        raise ValueError(
+            f"constrained random sampling: the feasible region {region} "
+            f"after {drawn} seeded draws; relax the constraints or widen "
+            f"the axis ranges")
+    points = {k: np.concatenate([p[k] for p in kept_points])[:n]
+              for k in kept_points[0]}
+    cats = {k: (tables[k], np.concatenate([c[k] for c in kept_codes])[:n])
+            for k in kept_codes[0]}
     return points, n, cats

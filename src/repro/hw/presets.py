@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from repro.hw.registry import register
 from repro.hw.spec import ClockDomain, DramOrganization, Hardware, MemorySystem
+from repro.search.envelope import ResourceEnvelope
 
 #: Registry names the library itself relies on for defaults.
 DEFAULT_BOARD = "stratix10_ddr4_1866"
@@ -33,6 +34,21 @@ _S10_CLOCK = ClockDomain(
 )
 
 
+#: What one Stratix-10 board can actually host: the global-memory
+#: interconnect arbitrates up to 128 LSU ports, a kernel wider than 4 KiB
+#: of aggregate LSU width does not close timing, one DDR4 channel, and the
+#: burst buffers must fit the ~30 MB of on-chip BRAM.
+_S10_ENVELOPE = ResourceEnvelope(
+    lsu_ports=128, interconnect_bytes=4096,
+    dram_channels=1, buffer_bytes=30e6)
+
+#: TPU transplant budget: wider interconnect and more VMEM, one HBM stack
+#: presented as a single channel to the model.
+_TPU_ENVELOPE = ResourceEnvelope(
+    lsu_ports=256, interconnect_bytes=16384,
+    dram_channels=1, buffer_bytes=128e6)
+
+
 def _s10_board(name: str, dram: DramOrganization) -> Hardware:
     return Hardware(
         name=name,
@@ -46,6 +62,7 @@ def _s10_board(name: str, dram: DramOrganization) -> Hardware:
             capacity_bytes=2e9,     # paper SIV: "2GB DDR4"
             local_bytes=30e6,       # on-chip BRAM order of magnitude
         ),
+        envelope=_S10_ENVELOPE,
     )
 
 
@@ -81,6 +98,7 @@ TPU_V5E = register(Hardware(
         burst_cnt=0,                 # one min-burst per transaction (512 B)
         max_th=128, f_kernel=940e6, peak_flops=197e12,
         ici_bw=50e9, ici_links=4, ici_hop_latency=1e-6),
+    envelope=_TPU_ENVELOPE,
 ))
 
 TPU_V4 = register(Hardware(
@@ -97,4 +115,5 @@ TPU_V4 = register(Hardware(
         burst_cnt=0, max_th=128, f_kernel=1050e6, peak_flops=275e12,
         ici_bw=50e9, ici_links=6,    # 3D torus: six ICI links per chip
         ici_hop_latency=1e-6),
+    envelope=_TPU_ENVELOPE,
 ))

@@ -34,6 +34,8 @@ import dataclasses
 import json
 from typing import TYPE_CHECKING, Any, Mapping
 
+from repro.search.envelope import ResourceEnvelope
+
 if TYPE_CHECKING:  # the legacy view classes; imported lazily at runtime so
     # repro.hw stays import-clean of repro.core (repro.core re-exports the
     # registry-built constants, which would otherwise be circular).
@@ -142,7 +144,11 @@ class Hardware:
     :mod:`repro.hw` (``hw.get("tpu_v5e")``), and hand to
     ``Session.with_hardware`` to evaluate designs against it.
     ``host_factor`` is the persisted calibration scalar (measured/modeled on
-    the stream anchor, 1.0 = uncalibrated).
+    the stream anchor, 1.0 = uncalibrated).  ``envelope`` is the spec's
+    hard resource budget (:class:`repro.search.ResourceEnvelope`; ``None``
+    = unconstrained) — pass it to ``Session.sweep(constraints=[...])`` /
+    ``Session.optimize`` to restrict a search to designs the target can
+    actually host.
     """
 
     name: str
@@ -150,6 +156,7 @@ class Hardware:
     dram: DramOrganization = DramOrganization()
     clock: ClockDomain = ClockDomain()
     host_factor: float = 1.0
+    envelope: ResourceEnvelope | None = None
 
     def __post_init__(self):
         if not self.name:
@@ -176,6 +183,10 @@ class Hardware:
 
     def with_host_factor(self, host_factor: float) -> "Hardware":
         return dataclasses.replace(self, host_factor=float(host_factor))
+
+    def with_envelope(self, envelope: "ResourceEnvelope | None",
+                      ) -> "Hardware":
+        return dataclasses.replace(self, envelope=envelope)
 
     def with_efficiencies(self, **k: float) -> "Hardware":
         """Replace per-class efficiency factors: ``with_efficiencies(
@@ -306,7 +317,7 @@ class Hardware:
 
     def to_dict(self) -> dict:
         """JSON-able dict (stable keys; includes the schema version)."""
-        return {
+        out = {
             "schema": SCHEMA_VERSION,
             "name": self.name,
             "host_factor": self.host_factor,
@@ -314,6 +325,9 @@ class Hardware:
             "dram": dataclasses.asdict(self.dram),
             "clock": dataclasses.asdict(self.clock),
         }
+        if self.envelope is not None:
+            out["envelope"] = self.envelope.to_dict()
+        return out
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True)
@@ -330,12 +344,15 @@ class Hardware:
             known = {f.name for f in dataclasses.fields(klass)}
             return klass(**{k: v for k, v in dict(data).items() if k in known})
 
+        env = obj.get("envelope")
         return cls(
             name=str(obj["name"]),
             mem=_load(MemorySystem, obj["mem"]),
             dram=_load(DramOrganization, obj["dram"]),
             clock=_load(ClockDomain, obj["clock"]),
-            host_factor=float(obj.get("host_factor", 1.0)))
+            host_factor=float(obj.get("host_factor", 1.0)),
+            envelope=(ResourceEnvelope.from_dict(env)
+                      if env is not None else None))
 
     @classmethod
     def from_json(cls, text: str) -> "Hardware":
@@ -384,6 +401,7 @@ def enable_jax() -> bool:
     _register(MemorySystem)
     _register(DramOrganization, aux_fields=("name",))
     _register(ClockDomain)
-    _register(Hardware, aux_fields=("name",))
+    # the envelope is plain hashable data, not arrays — aux, not leaves
+    _register(Hardware, aux_fields=("name", "envelope"))
     _PYTREE_REGISTERED = True
     return True

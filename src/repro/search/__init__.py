@@ -1,0 +1,60 @@
+"""``repro.search`` — constrained + gradient-based design-space exploration.
+
+The paper's value proposition is scoring a design point in microseconds
+instead of hours of place-and-route; this package turns that speed into
+*search* instead of enumeration:
+
+* :mod:`repro.search.envelope` — :class:`ResourceEnvelope`, the frozen,
+  serializable resource budget a :class:`repro.hw.Hardware` spec carries
+  (LSU ports, interconnect bytes, DRAM channels, on-chip buffer bytes),
+  plus the per-design resource-*usage* model that is compared against it.
+* :mod:`repro.search.constraints` — the :class:`Constraint` algebra
+  (``within(envelope)``, column bounds, custom callables, conjunction)
+  and the vectorized feasibility mask the streaming sweep engine applies
+  *before* scoring a chunk, bit-equal to post-filtering the unconstrained
+  sweep.
+* :mod:`repro.search.optimize` — ``Session.optimize``'s implementation:
+  continuous relaxation of the integer axes, multi-start AdamW descent
+  through the differentiable estimator (one lane per categorical
+  combination), discrete refinement + Pareto local search through the
+  existing streaming evaluator, reported as :class:`OptimizeReport`.
+
+Import order matters: :mod:`repro.hw.spec` imports the envelope module at
+class-definition time — while :mod:`repro.hw` itself is still
+initializing — so this ``__init__`` must stay import-free: every public
+name resolves lazily through PEP 562 ``__getattr__`` (the constraint and
+optimizer modules reach back into :mod:`repro.core` / :mod:`repro.api`).
+"""
+import importlib
+
+#: public name -> submodule that defines it (all served lazily).
+_EXPORTS = {
+    "ResourceEnvelope": "envelope",
+    "USAGE_COLUMNS": "envelope",
+    "usage_from_axes": "envelope",
+    "usage_of_design": "envelope",
+    "Constraint": "constraints",
+    "EnvelopeConstraint": "constraints",
+    "BoundConstraint": "constraints",
+    "LambdaConstraint": "constraints",
+    "AllOf": "constraints",
+    "within": "constraints",
+    "as_constraint": "constraints",
+    "normalize_constraints": "constraints",
+    "feasibility_mask": "constraints",
+    "OptimizeReport": "optimize",
+    "run_optimize": "optimize",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is not None:
+        return getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

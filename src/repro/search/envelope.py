@@ -1,0 +1,200 @@
+"""Resource envelopes as data: the budget side and the usage side.
+
+Real DSE tools prune candidate designs by hard resource constraints before
+scoring anything (charm's CDSE prunes on DSP/BRAM/URAM/HBM channels); the
+analytical model makes scoring nearly free, but a feasibility cut is
+*entirely* free and composes with every search strategy.  This module
+supplies both halves of that cut:
+
+* :class:`ResourceEnvelope` — a frozen, hashable, JSON-round-trippable
+  budget over the four resources the microbenchmark family consumes:
+  LSU ports into the global-memory interconnect, interconnect data width
+  in bytes (the sweep engine's ``resource`` objective), DRAM channels,
+  and on-chip transaction-buffer bytes.  ``None`` means unbounded.
+  Every :class:`repro.hw.Hardware` spec carries one (presets included),
+  so ``constraints=[board.envelope]`` is the one-liner.
+* The **usage model** — :func:`usage_from_axes` (vectorized over sweep
+  columns; what the streaming feasibility mask evaluates) and
+  :func:`usage_of_design` (one :class:`repro.Design`).  Both express the
+  same accounting: one port and ``ls_width`` interconnect bytes per
+  global LSU, one max-size transaction buffer per burst-coalesced LSU
+  (``2**burst_cnt * dq * bl`` bytes — the generated Verilog's burst
+  buffer), ``ls_width`` buffer bytes for non-burst (atomic) units, and
+  one DRAM channel whenever the design issues global traffic at all.
+
+This module must stay import-light (numpy + stdlib only):
+:mod:`repro.hw.spec` imports it at class-definition time, while
+:mod:`repro.hw` — which :mod:`repro.core` initializes from — is itself
+still loading, so importing ``repro.core`` here would be circular.
+:func:`usage_from_axes` therefore imports the type codes lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+import numpy as np
+
+#: The usage columns a feasibility mask can read, in canonical order.
+USAGE_COLUMNS = ("lsu_ports", "interconnect_bytes", "dram_channels",
+                 "buffer_bytes")
+
+#: Bump when a field is added/renamed so persisted envelopes are identifiable.
+ENVELOPE_SCHEMA = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceEnvelope:
+    """A hard resource budget; ``None`` caps nothing.
+
+    Fields mirror :data:`USAGE_COLUMNS`.  The envelope is plain data —
+    hashable, picklable, JSON-round-trippable — so it rides on a
+    :class:`repro.hw.Hardware` spec (as pytree aux data) and inside a
+    :class:`repro.core.stream.SweepPlan` without dragging code along.
+    """
+
+    lsu_ports: float | None = None
+    interconnect_bytes: float | None = None
+    dram_channels: float | None = None
+    buffer_bytes: float | None = None
+
+    def __post_init__(self):
+        for name in USAGE_COLUMNS:
+            cap = getattr(self, name)
+            if cap is not None and not float(cap) >= 0:
+                raise ValueError(f"envelope cap {name}={cap!r} must be >= 0")
+
+    def caps(self) -> dict[str, float]:
+        """The bounded columns only: column name -> cap."""
+        return {name: float(getattr(self, name)) for name in USAGE_COLUMNS
+                if getattr(self, name) is not None}
+
+    def admits(self, usage: Mapping[str, Any]) -> np.ndarray:
+        """Vectorized ``usage <= cap`` over every bounded column."""
+        caps = self.caps()
+        if not caps:
+            probe = next(iter(usage.values()), np.ones(0))
+            return np.ones(np.shape(np.asarray(probe)), dtype=bool)
+        mask: np.ndarray | None = None
+        for name, cap in caps.items():
+            ok = np.asarray(usage[name], dtype=np.float64) <= cap
+            mask = ok if mask is None else (mask & ok)
+        return mask
+
+    def constraint(self):
+        """This envelope as a :class:`repro.search.constraints.Constraint`."""
+        from repro.search.constraints import EnvelopeConstraint
+
+        return EnvelopeConstraint(self)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {"schema": ENVELOPE_SCHEMA,
+                **{name: getattr(self, name) for name in USAGE_COLUMNS}}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, obj: Mapping[str, Any]) -> "ResourceEnvelope":
+        schema = obj.get("schema", ENVELOPE_SCHEMA)
+        if schema > ENVELOPE_SCHEMA:
+            raise ValueError(
+                f"ResourceEnvelope schema {schema} is newer than this "
+                f"library's {ENVELOPE_SCHEMA}")
+        def _num(v):
+            # keep int caps int so to_json(from_json(x)) == x byte-for-byte
+            if v is None or (isinstance(v, (int, float))
+                             and not isinstance(v, bool)):
+                return v
+            return float(v)
+
+        return cls(**{name: _num(obj.get(name)) for name in USAGE_COLUMNS})
+
+    @classmethod
+    def from_json(cls, text: str) -> "ResourceEnvelope":
+        return cls.from_dict(json.loads(text))
+
+
+def max_transaction_bytes(dq, bl, burst_cnt):
+    """Per-burst-LSU transaction buffer [B]: ``2**burst_cnt * dq * bl``.
+
+    Vectorized; mirrors ``BspParams.max_transaction_bytes`` (paper Table
+    II: BURSTCOUNT_WIDTH sizes the largest coalesced transaction).
+    """
+    return (2.0 ** np.asarray(burst_cnt, dtype=np.float64)
+            * np.asarray(dq, dtype=np.float64)
+            * np.asarray(bl, dtype=np.float64))
+
+
+def usage_from_axes(*, type_codes, n_ga, simd, elem_bytes, include_write,
+                    max_txn, xp=np) -> dict[str, Any]:
+    """Per-point resource usage from sweep-axis columns (vectorized).
+
+    Inputs are per-point arrays: ``type_codes`` are
+    :data:`repro.core.model_batch.TYPE_CODE` integers, ``max_txn`` the
+    per-point burst-buffer size (:func:`max_transaction_bytes` of the
+    point's effective DRAM/BSP).  The accounting matches the microbench
+    group expansion of :func:`repro.core.sweep._score` exactly — in
+    particular ``interconnect_bytes`` equals its ``resource`` column —
+    so a feasibility mask computed here is bit-equal to post-filtering
+    scored results.  ``xp=jnp`` (with float inputs) makes every column
+    differentiable for the relaxed optimizer.
+    """
+    from repro.core import model_batch as _mb
+
+    type_codes = xp.asarray(type_codes)
+    n_ga = xp.asarray(n_ga)
+    simd = xp.asarray(simd)
+    elem_bytes = xp.asarray(elem_bytes)
+    max_txn = xp.asarray(max_txn)
+    is_atomic = type_codes == _mb.ATOMIC
+    is_ack = type_codes == _mb.WRITE_ACK
+    # include_write is inert for atomics (the atomic IS the write) — the
+    # same normalization _score applies before expanding groups.
+    iw = xp.asarray(include_write, dtype=bool) & ~is_atomic
+
+    g1_count = xp.where(is_atomic | is_ack, n_ga, n_ga + iw)
+    g1_width = xp.where(is_atomic, elem_bytes, simd * elem_bytes)
+    g2_count = xp.where(is_ack & iw, simd, xp.zeros_like(simd))
+
+    ports = g1_count + g2_count
+    interconnect = g1_count * g1_width + g2_count * elem_bytes
+    # Burst-coalesced LSUs buffer one max transaction each; atomic units
+    # buffer one element-wide beat.  The ACK store group is burst-typed.
+    g1_buf = xp.where(is_atomic, g1_width, max_txn)
+    buffer_bytes = g1_count * g1_buf + g2_count * max_txn
+    channels = xp.where(ports > 0, xp.ones_like(max_txn),
+                        xp.zeros_like(max_txn))
+    return {"lsu_ports": ports, "interconnect_bytes": interconnect,
+            "dram_channels": channels, "buffer_bytes": buffer_bytes}
+
+
+def usage_of_design(design, dram=None, bsp=None) -> dict[str, float]:
+    """Resource usage of one :class:`repro.Design` (scalar totals).
+
+    ``dram``/``bsp`` size the burst buffers (the design's own overrides
+    win; both default to the library's default board).  Agrees with
+    :func:`usage_from_axes` on every microbench design (tested).
+    """
+    dram = design.dram or dram
+    bsp = design.bsp or bsp
+    if dram is None or bsp is None:
+        from repro.hw import DEFAULT_BOARD, get as _hw_get
+
+        board = _hw_get(DEFAULT_BOARD)
+        dram = dram or board.dram_params()
+        bsp = bsp or board.bsp_params()
+    txn = float(max_transaction_bytes(dram.dq, dram.bl, bsp.burst_cnt))
+    ports = interconnect = buffer_bytes = 0.0
+    for lsu in design.lsus:
+        if not lsu.lsu_type.is_global:
+            continue
+        ports += 1
+        interconnect += lsu.ls_width
+        buffer_bytes += txn if lsu.lsu_type.is_burst else lsu.ls_width
+    return {"lsu_ports": ports, "interconnect_bytes": interconnect,
+            "dram_channels": 1.0 if ports else 0.0,
+            "buffer_bytes": buffer_bytes}
