@@ -61,6 +61,18 @@ The gradient-based optimizer gates on the ``optimize_1m`` row:
   evaluation count deterministic, so ``n_evals`` more than ``TOLERANCE``
   above the committed value fails with no machine excuse.
 
+Whole-model estimation gates on the ``model_e2e`` rows:
+
+* composition invariant, judged in-run and machine-independent: every
+  hardware/phase row's ``agree`` flag (``Session.estimate_model`` phase
+  total == summed per-op ``Session.estimate`` calls at 1e-6) must be
+  true — a false flag is a composition bug, never a machine artifact;
+* ratchet vs the committed baseline: the ``total`` row's ``wall_s``
+  (lower + compile + walk + compose) more than ``TOLERANCE`` above the
+  committed value fails, unless the materialized-baseline stream control
+  slowed past the same tolerance too (slower machine, not an analysis
+  regression).
+
 A missing baseline entry (first run after the feature lands, or a renamed
 backend/scenario) passes with a notice — the gate ratchets only what is
 recorded.  The committed baseline should be refreshed (re-run the smoke
@@ -215,6 +227,69 @@ def check_optimize(fresh_payload: dict, base_payload: dict | None,
             f"efficiency regression)")
 
 
+def model_rows(payload: dict) -> list[dict]:
+    return (payload.get("details") or {}).get("model_e2e") or []
+
+
+def check_model(fresh_payload: dict, base_payload: dict | None,
+                failures: list[str]) -> None:
+    """Gate the whole-model estimation rows.
+
+    * composition invariant, judged in-run and machine-independent: every
+      row's ``agree`` flag (``Session.estimate_model`` phase total ==
+      summed per-op ``Session.estimate`` calls at 1e-6) must be true — a
+      false flag is a composition bug, never a machine artifact;
+    * ratchet vs the committed baseline: the ``total`` row's ``wall_s``
+      (lower + compile + walk + compose, everything) more than
+      ``TOLERANCE`` above the committed value fails, unless the in-run
+      materialized-baseline stream control slowed past the same tolerance
+      too (slower machine, not an analysis regression).
+    """
+    rows = model_rows(fresh_payload)
+    if not rows:
+        print("bench gate: model: no model_e2e rows in fresh artifact — "
+              "skipped")
+        return
+    # 1. in-run composition invariant — never excused
+    bad = [f"{r['hardware']}/{r['phase']}" for r in rows
+           if not r.get("agree", False)]
+    if bad:
+        failures.append(
+            f"model_e2e: composed total != summed per-op estimates for "
+            f"{', '.join(bad)} (composition contract broken)")
+    else:
+        print(f"bench gate: model_e2e: composed == summed parts on "
+              f"{len(rows) - 1} preset/phase rows -> OK")
+    # 2. wall-time ratchet with the stream machine control
+    total = next((r for r in rows if r.get("hardware") == "total"), None)
+    base_total = next((r for r in model_rows(base_payload or {})
+                       if r.get("hardware") == "total"), None)
+    if total is None or base_total is None or "wall_s" not in base_total:
+        print("bench gate: model_e2e: no committed wall-time baseline — "
+              "passing (first run records it)")
+        return
+    got, want = float(total["wall_s"]), float(base_total["wall_s"])
+    ceiling = (1.0 + TOLERANCE) * want
+    if got <= ceiling:
+        print(f"bench gate: model_e2e: wall {got:.2f}s vs committed "
+              f"{want:.2f}s (ceiling {ceiling:.2f}s) -> OK")
+        return
+    fresh_base = baseline_pps(fresh_payload)
+    committed_base = baseline_pps(base_payload) if base_payload else None
+    machine_slow = (fresh_base is not None and committed_base is not None
+                    and fresh_base < (1.0 - TOLERANCE) * committed_base)
+    if machine_slow:
+        print(f"bench gate: model_e2e: wall {got:.2f}s above the "
+              f"{ceiling:.2f}s ceiling, but the materialized stream "
+              f"control slowed too ({fresh_base:,.0f} vs committed "
+              f"{committed_base:,.0f} pps) — slower machine, not an "
+              f"analysis regression -> OK")
+        return
+    failures.append(
+        f"model_e2e: wall {got:.2f}s is >{TOLERANCE:.0%} above the "
+        f"committed {want:.2f}s without a matching machine slowdown")
+
+
 def check_serve(fresh_payload: dict, base_payload: dict | None,
                 failures: list[str]) -> None:
     """Gate the serving-latency rows (see module docstring)."""
@@ -290,6 +365,7 @@ def main() -> int:
     check_serve(fresh_payload, base_payload, failures)
     check_dist(fresh_payload, base_payload, failures)
     check_optimize(fresh_payload, base_payload, failures)
+    check_model(fresh_payload, base_payload, failures)
 
     base = stream_rows(base_payload) if base_payload else {}
     committed_base = baseline_pps(base_payload) if base_payload else None

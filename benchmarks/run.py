@@ -10,9 +10,11 @@ Usage:
 ``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
 Fig. 5 stride, a reduced design-space sweep, the 1M-point streaming
 sweep whose per-backend points/sec + peak RSS feed the CI perf gate,
-the distributed-sweep scaling bench at 1/2/4 process workers, and
+the distributed-sweep scaling bench at 1/2/4 process workers,
 the 32-client serving-latency bench whose p50/p99 feed the CI latency
-gate) and,
+gate, and the whole-model ``model_e2e`` bench — transformer train +
+decode steps composed through ``Session.estimate_model`` on two hardware
+presets, agreement- and wall-time-gated) and,
 with ``--out``, writes the full results as a JSON artifact for CI upload.  ``--out json``
 resolves to ``BENCH_smoke.json`` at the repository root — the recorded
 perf-trajectory artifact CI uploads.  ``--hw <name>`` re-runs everything
@@ -124,6 +126,15 @@ def main() -> None:
         details["serve_smoke"] = rows
         summary.append(("serve_smoke", us, _derive("serve_smoke", rows)))
 
+        # whole-model estimation: transformer train + decode steps composed
+        # through Session.estimate_model on two hardware presets; the
+        # composed-total == summed-parts agreement plus a wall-time ratchet
+        # feed the model gate.
+        from benchmarks import model_bench as MB
+        rows, us = PT.timed(lambda: MB.model_e2e(session=session))
+        details["model_e2e"] = rows
+        summary.append(("model_e2e", us, _derive("model_e2e", rows)))
+
     if not args.smoke:
         # roofline (reads dry-run artifacts if present)
         try:
@@ -226,6 +237,12 @@ def _derive(name: str, rows: list[dict]) -> str:
                 f"hot={hot['qps']:,.0f}qps hit={hot['cache_hit_rate']:.2f} "
                 f"cold={cold['qps']:,.0f}qps "
                 f"mean_batch={cold['mean_batch']:.1f}")
+    if name == "model_e2e":
+        total = next(r for r in rows if r["hardware"] == "total")
+        parts = [f"{r['hardware']}/{r['phase']}={r['t_total_ms']}ms"
+                 for r in rows if r["hardware"] != "total"]
+        return (f"agree={total['agree']} wall={total['wall_s']}s "
+                f"{' '.join(parts)}")
     if name == "table6_kernel_validation":
         errs = [r["err_pct"] for r in rows if isinstance(r["err_pct"], float)]
         fails = len(rows) - len(errs)

@@ -15,8 +15,10 @@ Pallas kernels and scores the analytical model against the measurement
 
 Run:  python examples/membound_explorer.py   (pip install -e . or
 PYTHONPATH=src; pass --sweep-only to skip the jax compilation part,
---validate for just the measured-vs-predicted table, --hw <name> to
-evaluate against a ``repro.hw`` registry spec, e.g. --hw tpu_v4)
+--validate for just the measured-vs-predicted table, --model for the
+whole-model transformer walkthrough (``Session.estimate_model``),
+--hw <name> to evaluate against a ``repro.hw`` registry spec, e.g.
+--hw tpu_v4)
 
 Everything routes through the unified ``repro.Design``/``repro.Session``
 API — this file doubles as its end-to-end example.
@@ -143,6 +145,37 @@ def validate_demo() -> None:
         print(f"  {f['kernel']:>18s}  FAILED: {f['error']}")
 
 
+def model_demo() -> None:
+    """Whole-model estimation: walk the shipped transformer's train and
+    decode steps, compose per-op Eqs. 1-10 estimates into an end-to-end
+    latency/roofline report (``Session.estimate_model``)."""
+    from repro.configs import ARCHS, reduced_config
+    from repro.workload.report import op_table
+
+    cfg = reduced_config(ARCHS[sorted(ARCHS)[0]], layers_scale=2)
+    sess = _session()
+    t0 = time.perf_counter()
+    rep = sess.estimate_model(cfg, phases=("train", "decode"),
+                              batch=2, seq_len=64)
+    dt = time.perf_counter() - t0
+    s = rep.summary()
+    print(f"\nWhole-model estimation: {rep.name} on "
+          f"{s['hardware']} ({dt:.1f} s to lower + walk + compose)")
+    print(f"  total {rep.total_latency() * 1e3:.3f} ms, "
+          f"AI={rep.arithmetic_intensity:.2f} FLOP/B "
+          f"(ridge {rep.ridge_intensity:.0f}), "
+          f"{'memory' if rep.memory_bound else 'compute'}-bound overall")
+    for phase in rep.phases:
+        print(f"\n  {phase.name}: {phase.t_total * 1e3:.3f} ms over "
+              f"{phase.n_ops} ops ({len(phase.ops)} with DRAM traffic), "
+              f"bottleneck={phase.bottleneck}")
+        for d in phase.by_class():
+            print(f"    {d['op_class']:>12s}: {d['t_exe'] * 1e3:8.3f} ms "
+                  f"({d['share'] * 100:5.1f}%) {d['n_ops']:3d} ops "
+                  f"{d['bytes'] / 1e6:8.2f} MB")
+    print(f"\n  heaviest decode ops:\n{op_table(rep.phase('decode'), top=5)}")
+
+
 def explain(name: str, fn, *specs) -> None:
     import jax
 
@@ -200,5 +233,7 @@ if __name__ == "__main__":
         stream_demo()
     elif "--validate" in sys.argv[1:]:
         validate_demo()
+    elif "--model" in sys.argv[1:]:
+        model_demo()
     else:
         main()

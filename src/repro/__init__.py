@@ -43,6 +43,14 @@ grid optimum / Pareto front by relaxing the integer axes and descending
 the differentiable model — typically evaluating under 1% of the grid
 (:mod:`repro.search`).
 
+Whole models compose from the same per-kernel model:
+``sess.estimate_model(cfg)`` walks a compiled train/decode step op by op
+(trip-count aware), scores every op's DRAM traffic through Eqs. 1-10 in
+one batched pass, and returns a :class:`ModelReport` whose phase totals
+are exactly the sum of the per-op estimates; ``sess.sweep_model(...)``
+makes model shape x sharding x hardware a streaming grid behind a
+picklable :class:`ModelSweepPlan` (:mod:`repro.workload`).
+
 Interactive advisor traffic goes through the serving layer:
 ``sess.serve()`` returns a :class:`Server` that micro-batches concurrent
 ``estimate`` calls from any number of threads into single batched scoring
@@ -98,10 +106,19 @@ from repro.search import (
     ResourceEnvelope,
     within,
 )
+# Whole-model estimation (Session.estimate_model / plan_model / sweep_model
+# return these; repro.workload imports NumPy only — jax stays lazy).
+from repro.workload import (
+    ModelReport,
+    ModelSweepPlan,
+    ModelSweepReport,
+    OpRecord,
+    PhaseReport,
+)
 
 TPU_V5E = hw.get("tpu_v5e").tpu_params()
 
-__version__ = "0.8.0"
+__version__ = "0.9.0"
 
 __all__ = [
     # the unified API
@@ -112,6 +129,9 @@ __all__ = [
     "Server", "ServerClosed", "ServerOverloaded", "RequestTimeout",
     # constrained + gradient-based search
     "ResourceEnvelope", "Constraint", "within", "OptimizeReport",
+    # whole-model estimation (repro.workload)
+    "ModelReport", "PhaseReport", "OpRecord",
+    "ModelSweepPlan", "ModelSweepReport",
     # the hardware-spec layer
     "hw", "Hardware", "MemorySystem", "DramOrganization", "ClockDomain",
     # design vocabulary (paper Tables I-III)

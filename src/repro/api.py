@@ -1214,6 +1214,179 @@ class Session:
         return _pred.predict_step(hlo_text, cost, self.hw,
                                   gather_row_bytes=gather_row_bytes)
 
+    # -- whole-model estimation (repro.workload) ----------------------------
+
+    def _model_hlo_texts(self, model, args, *, phases, batch,
+                         seq_len) -> tuple[str, dict[str, str]]:
+        """(model name, phase -> compiled HLO text) for every input form
+        ``estimate_model``/``plan_model`` accept: HLO text, a mapping of
+        phase name -> HLO text, a model-zoo config (lowered via
+        ``workload.steps``), or a jittable callable + example args."""
+        if isinstance(model, str):
+            return "hlo", {"step": model}
+        if isinstance(model, Mapping):
+            return "hlo", {str(k): str(v) for k, v in model.items()}
+        if hasattr(model, "block_pattern"):     # models.config.ModelConfig
+            from repro.workload import steps as _steps
+
+            return model.name, {
+                p: _steps.phase_hlo(model, p, batch=batch, seq_len=seq_len)
+                for p in phases}
+        if callable(model):
+            import jax
+
+            jitted = model if hasattr(model, "lower") else jax.jit(model)
+            text = jitted.lower(*args).compile().as_text()
+            return getattr(model, "__name__", "model"), {"step": text}
+        raise TypeError(
+            f"estimate_model wants HLO text, a mapping of phase -> HLO "
+            f"text, a ModelConfig, or a jittable callable; got "
+            f"{type(model).__name__}")
+
+    def estimate_model(self, model, *args, phases=("train", "decode"),
+                       batch: int = 1, seq_len: int = 128, name: str = "",
+                       access_bytes: int | None = None,
+                       fused: bool = True) -> "_workload.ModelReport":
+        """End-to-end estimate of a whole compiled model step.
+
+        Walks every materialized op of each phase's module
+        (:func:`repro.workload.walk_module`), maps each op's access-class
+        traffic onto LSU groups, scores all ops in **one** batched Eqs.
+        1-10 pass on this session's backend, and composes a
+        :class:`~repro.workload.ModelReport` — per-phase totals (defined
+        as the sum of the per-op estimates), per-layer and per-op-class
+        breakdowns, and the aggregate roofline position.
+
+        ``model`` may be compiled HLO text, a ``{phase: hlo_text}``
+        mapping, a model-zoo :class:`~repro.models.config.ModelConfig`
+        (its ``phases`` are lowered here at ``batch`` x ``seq_len``; needs
+        jax), or a jittable callable with example ``*args``.
+        """
+        from repro import workload as _wl
+
+        mname, texts = self._model_hlo_texts(
+            model, args, phases=phases, batch=batch, seq_len=seq_len)
+        records = {p: _wl.walk_module(t, fused=fused)
+                   for p, t in texts.items()}
+        return _wl.compose_model(self, name or mname, records,
+                                 access_bytes=access_bytes)
+
+    def plan_model(self, model, *, phases=("decode",), batch=(1,),
+                   seq_len=(128,), shards=(1,), hardware=(None,),
+                   chunk_size: int = 256, access_bytes: int | None = None,
+                   fused: bool = True,
+                   name: str = "") -> "_workload.ModelSweepPlan":
+        """A frozen, picklable whole-model sweep plan.
+
+        Every distinct ``(phase, batch, seq_len)`` combination is lowered
+        and walked **once here** (the only step that needs jax or the
+        model code); the returned :class:`~repro.workload.ModelSweepPlan`
+        is pure data — JSON/pickle it to any process and stream it there.
+        ``hardware`` axis values may be specs, preset names, or ``None``
+        (= this session's hardware).
+        """
+        from repro import workload as _wl
+        from repro.core import validate as _validate
+
+        phases = tuple(phases)
+        batch = tuple(int(b) for b in batch)
+        seq_len = tuple(int(s) for s in seq_len)
+        tables: dict[str, tuple] = {}
+        mname = name
+        for b in batch:
+            for s in seq_len:
+                pname, texts = self._model_hlo_texts(
+                    model, (), phases=phases, batch=b, seq_len=s)
+                mname = mname or pname
+                for p in phases:
+                    if p not in texts:
+                        raise ValueError(
+                            f"phase {p!r} not in walked phases "
+                            f"{list(texts)}")
+                    recs = _wl.walk_module(texts[p], fused=fused)
+                    tables[f"{p}|{b}|{s}"] = tuple(
+                        {"classes": dict(r.bytes_by_class),
+                         "flops": r.flops}
+                        for r in recs if r.total_bytes > 0)
+        pbytes = 0.0
+        if hasattr(model, "block_pattern"):
+            from repro.workload import steps as _steps
+
+            pbytes = _steps.param_bytes(model)
+        return _wl.ModelSweepPlan(
+            model=mname or "model",
+            lists={"phase": phases, "batch": batch, "seq_len": seq_len,
+                   "shards": tuple(shards), "hardware": tuple(hardware)},
+            tables=tables, param_bytes=pbytes,
+            dram=self.dram, bsp=self.bsp, backend=self.backend,
+            calibration_factor=float(self.calibration_factor),
+            chunk_size=chunk_size,
+            access_bytes=access_bytes or _validate.ACCESS_BYTES)
+
+    def sweep_model(self, model=None, *, plan=None, phases=("decode",),
+                    batch=(1,), seq_len=(128,), shards=(1,),
+                    hardware=(None,), chunk_size: int | None = None,
+                    reducers=None, k: int = 10,
+                    access_bytes: int | None = None, fused: bool = True,
+                    ) -> "_workload.ModelSweepReport":
+        """Sweep model shape x sharding x hardware through the streaming
+        engine.
+
+        With ``chunk_size=None`` (default — model grids are small) the
+        whole grid is evaluated in one materialized pass and the report
+        holds every point; with a ``chunk_size`` the grid streams through
+        ``run_stream`` into Pareto/top-k/stats reducers and the report
+        holds the survivors — per-point values are bit-equal either way
+        (tested).  Pass a prebuilt ``plan`` to skip lowering.
+        """
+        from repro import workload as _wl
+        from repro.core import stream as _stream
+
+        if plan is None:
+            if model is None:
+                raise ValueError("sweep_model needs a model or a plan")
+            plan = self.plan_model(
+                model, phases=phases, batch=batch, seq_len=seq_len,
+                shards=shards, hardware=hardware,
+                chunk_size=chunk_size or 256, access_bytes=access_bytes,
+                fused=fused)
+        elif chunk_size is not None:
+            plan = dataclasses.replace(plan, chunk_size=chunk_size)
+
+        if chunk_size is None:
+            cols = plan.materialize()
+            stats = _stream.StatsReducer()
+            if len(cols["id"]):
+                stats.update(cols)
+            return _wl.ModelSweepReport(
+                plan, cols, n_total=plan.n, stats=stats.summary(),
+                streaming=False)
+
+        reducers = tuple(reducers) if reducers is not None \
+            else _stream.default_reducers(k)
+        outcome = plan.run(reducers)
+        front = next((r for r in outcome.reducers
+                      if isinstance(r, _stream.ParetoReducer)), None)
+        topk = next((r for r in outcome.reducers
+                     if isinstance(r, _stream.TopKReducer)), None)
+        stats = next((r for r in outcome.reducers
+                      if isinstance(r, _stream.StatsReducer)), None)
+        pieces = [r.cols for r in (front, topk)
+                  if r is not None and r.cols is not None]
+        if pieces:
+            merged = {kk: np.concatenate([p[kk] for p in pieces])
+                      for kk in pieces[0]}
+            _, first = np.unique(
+                np.asarray(merged["id"], dtype=np.int64),
+                return_index=True)
+            merged = {kk: np.asarray(v)[first] for kk, v in merged.items()}
+        else:
+            merged = {kk: np.empty(0) for kk in _wl.sweep.MODEL_COLUMNS}
+        return _wl.ModelSweepReport(
+            plan, merged, n_total=outcome.n_points,
+            stats=stats.summary() if stats is not None else None,
+            streaming=True, reducers=outcome.reducers)
+
     # -- serving ------------------------------------------------------------
 
     def serve(self, *, max_batch: int = 64, max_wait_ms: float = 1.0,

@@ -36,7 +36,7 @@ from repro.core.hlo import shape_bytes, COLLECTIVE_KINDS, _collective_from, _gro
 #: Bump whenever the analysis semantics change (opcode coverage, class
 #: mapping, trip-count recovery, ...) so on-disk caches of analyze() output
 #: (core.cache / core.autotune) are invalidated automatically.
-ANALYZER_VERSION = 1
+ANALYZER_VERSION = 2
 
 _COMP_HEADER_RE = re.compile(
     r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*.+\{\s*$")
@@ -204,12 +204,17 @@ class HloCost:
     def scaled(self, mult: float) -> "HloCost":
         out = HloCost()
         out.flops = self.flops * mult
-        out.bytes_by_class = defaultdict(
-            float, {k: v * mult for k, v in self.bytes_by_class.items()})
+        # mult == 0 must not leave stale zero-valued classes behind: a
+        # downstream consumer keys LSU groups off the class *names*, so a
+        # {"gather": 0.0} entry would still instantiate a gather group.
+        if mult:
+            out.bytes_by_class = defaultdict(
+                float, {k: v * mult for k, v in self.bytes_by_class.items()})
+            out.collective_by_kind = defaultdict(
+                float,
+                {k: v * mult for k, v in self.collective_by_kind.items()})
         out.collective_operand_bytes = self.collective_operand_bytes * mult
         out.collective_wire_bytes = self.collective_wire_bytes * mult
-        out.collective_by_kind = defaultdict(
-            float, {k: v * mult for k, v in self.collective_by_kind.items()})
         out.n_collectives = self.n_collectives * mult
         out.transcendentals = self.transcendentals * mult
         out.warnings = list(self.warnings)
@@ -542,11 +547,25 @@ class Analyzer:
         self._comp_cost_cache[comp_name] = total
         return total
 
-    def entry_cost(self) -> HloCost:
-        for name, comp in self.comps.items():
+    def entry_comp(self) -> Computation | None:
+        """The module's ENTRY computation, or None for degenerate modules
+        (constant-folded steps can compile to a body the line parser sees
+        no computations in at all)."""
+        for comp in self.comps.values():
             if comp.is_entry:
-                return self.comp_cost(name)
-        raise ValueError("no ENTRY computation found")
+                return comp
+        return None
+
+    def entry_cost(self) -> HloCost:
+        entry = self.entry_comp()
+        if entry is None:
+            # A fully constant-folded module is a valid, zero-traffic
+            # workload — report it as such rather than failing the whole
+            # model walk.
+            c = HloCost()
+            c.warnings.append("no ENTRY computation found; empty cost")
+            return c
+        return self.comp_cost(entry.name)
 
 
 def analyze(hlo_text: str, fused: bool = True) -> HloCost:

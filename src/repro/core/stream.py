@@ -628,6 +628,14 @@ def _axis_value_from_json(v):
     raise TypeError(f"unknown encoded axis value {v!r}")
 
 
+# Public names for the typed axis-value codecs: repro.workload's
+# ModelSweepPlan serializes its hardware axis (and base dram/bsp) through
+# the same tagged-dict encoding, so one codec owns every axis value that
+# crosses a JSON boundary.
+axis_value_to_json = _axis_value_to_json
+axis_value_from_json = _axis_value_from_json
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepPlan:
     """A frozen, picklable description of one streaming sweep.

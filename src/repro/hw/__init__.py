@@ -29,8 +29,21 @@ from repro.hw.spec import (
 from repro.hw import presets  # populates the registry
 from repro.hw.presets import DEFAULT_BOARD, DEFAULT_CHIP
 
+
+def resolve(spec: "Hardware | str | None") -> "Hardware | None":
+    """One place axis values become Hardware: a spec passes through, a
+    string looks up the registry, ``None`` stays ``None`` (meaning "the
+    session's own hardware" wherever an axis admits a default)."""
+    if spec is None or isinstance(spec, Hardware):
+        return spec
+    if isinstance(spec, str):
+        return get(spec)
+    raise TypeError(f"cannot resolve {spec!r} to a Hardware spec "
+                    f"(want Hardware | preset name | None)")
+
+
 __all__ = [
     "Hardware", "MemorySystem", "DramOrganization", "ClockDomain",
-    "get", "register", "unregister", "names", "enable_jax",
+    "get", "register", "unregister", "names", "enable_jax", "resolve",
     "DEFAULT_BOARD", "DEFAULT_CHIP", "SCHEMA_VERSION", "presets",
 ]

@@ -1,0 +1,51 @@
+"""``repro.workload`` — whole-model estimation.
+
+The paper predicts one memory-bound kernel from its early-known memory
+architecture; this package composes that prediction over an *entire
+compiled model step*:
+
+* :mod:`~repro.workload.walker` decomposes a module's trip-aware traffic
+  into per-op :class:`OpRecord` s (the per-op view of
+  ``hlo_counter.analyze``);
+* :mod:`~repro.workload.compose` turns each op into a
+  :class:`~repro.api.Design` (the validation harness's class -> LSU-group
+  mapping), scores all ops in one batched Eqs. 1-10 pass, and sums —
+  phase totals equal the sum of per-op estimates by construction;
+* :mod:`~repro.workload.report` is the result family
+  (:class:`ModelReport` / :class:`PhaseReport` / :class:`OpEstimate`);
+* :mod:`~repro.workload.steps` lowers the shipped transformer stack's
+  train / prefill / decode phases to HLO from shape structs alone
+  (jax-lazy);
+* :mod:`~repro.workload.sweep` makes model shape x sharding x hardware a
+  streaming grid (:class:`ModelSweepPlan`, picklable + JSON).
+
+Per the repo conventions the entry points live on :class:`repro.Session`
+(``estimate_model`` / ``plan_model`` / ``sweep_model``) — this package is
+the implementation.  Importing it does not import jax.
+"""
+from repro.workload.compose import (
+    compose_model,
+    compose_phase,
+    designs_from_records,
+)
+from repro.workload.report import ModelReport, OpEstimate, PhaseReport
+from repro.workload.sweep import MODEL_AXES, ModelSweepPlan, ModelSweepReport
+from repro.workload.walker import OP_CLASSES, OpRecord, walk_module
+
+__all__ = [
+    "OpRecord", "walk_module", "OP_CLASSES",
+    "OpEstimate", "PhaseReport", "ModelReport",
+    "designs_from_records", "compose_phase", "compose_model",
+    "MODEL_AXES", "ModelSweepPlan", "ModelSweepReport",
+    "PHASES", "phase_callable", "phase_hlo", "param_bytes",
+]
+
+
+def __getattr__(name):
+    # steps needs the model zoo (and therefore jax at call time); load it
+    # only when one of its names is actually requested.
+    if name in ("PHASES", "phase_callable", "phase_hlo", "param_bytes"):
+        from repro.workload import steps
+
+        return getattr(steps, name)
+    raise AttributeError(f"module 'repro.workload' has no attribute {name!r}")

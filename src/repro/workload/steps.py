@@ -1,0 +1,95 @@
+"""Lower model phases (train / prefill / decode) to compiled HLO text.
+
+The builders here are the shape-only analogue of ``launch.steps``: every
+array is a ``jax.ShapeDtypeStruct`` from ``jax.eval_shape`` — no
+parameters are ever materialized, no mesh is required — and the phase
+callable is lowered + compiled on CPU, exactly the artifact
+``Design.from_kernel`` reads for a single kernel.  Requires jax (imported
+lazily so ``import repro.workload`` stays jax-free).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+__all__ = ["PHASES", "phase_callable", "phase_hlo", "param_bytes"]
+
+PHASES = ("train", "prefill", "decode")
+
+
+def _check_cfg(cfg) -> None:
+    if getattr(cfg, "frontend", None):
+        raise ValueError(
+            f"workload.steps lowers token-frontend models only; "
+            f"{cfg.name!r} has frontend={cfg.frontend!r} (build the phase "
+            f"callable yourself and pass it to Session.estimate_model)")
+
+
+def _shape_params(cfg):
+    import jax
+
+    from repro.models import transformer as TF
+
+    return jax.eval_shape(
+        lambda: TF.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def phase_callable(cfg, phase: str, *, batch: int, seq_len: int,
+                   ) -> tuple[Callable, tuple[Any, ...]]:
+    """(fn, example_args) for one phase of the shipped transformer stack.
+
+    ``train`` is loss + grads (``value_and_grad`` over ``loss_fn``),
+    ``prefill`` runs the stack over the full prompt and keeps the last
+    position's logits, ``decode`` is one cached decoding step.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as TF
+
+    _check_cfg(cfg)
+    params = _shape_params(cfg)
+    tok = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+
+    if phase == "train":
+        def fn(params, tokens, labels):
+            (loss, _), grads = jax.value_and_grad(
+                TF.loss_fn, has_aux=True)(
+                    params, cfg, {"tokens": tokens, "labels": labels})
+            return loss, grads
+        return fn, (params, tok, tok)
+
+    if phase == "prefill":
+        def fn(params, tokens):
+            x = TF.embed_inputs(params, cfg, tokens=tokens)
+            h, _ = TF.forward_hidden(params, cfg, x)
+            return TF.logits_fn(params, cfg, h[:, -1:, :])
+        return fn, (params, tok)
+
+    if phase == "decode":
+        caches = jax.eval_shape(
+            lambda: TF.init_caches(cfg, batch, seq_len))
+
+        def fn(params, tokens, caches, index):
+            return TF.decode_step(params, cfg, tokens, caches, index)
+        return fn, (params, jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                    caches, jax.ShapeDtypeStruct((), jnp.int32))
+
+    raise ValueError(f"unknown phase {phase!r}; pick one of {PHASES}")
+
+
+def phase_hlo(cfg, phase: str, *, batch: int, seq_len: int) -> str:
+    """Compiled HLO text of one phase (lower + compile on this host)."""
+    import jax
+
+    fn, args = phase_callable(cfg, phase, batch=batch, seq_len=seq_len)
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def param_bytes(cfg) -> float:
+    """Total parameter bytes (from shape structs — nothing materialized).
+    Feeds the data-parallel gradient all-reduce term of the sharding
+    axis in :mod:`repro.workload.sweep`."""
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(_shape_params(cfg))
+    return float(sum(l.size * l.dtype.itemsize for l in leaves))

@@ -113,3 +113,62 @@ class TestCollectives:
         assert HLO.shape_bytes("bf16[2,16,4096]{2,1,0}") == 2 * 16 * 4096 * 2
         assert HLO.shape_bytes("(f32[8]{0}, s32[4]{0})") == 32 + 16
         assert HLO.shape_bytes("pred[]") == 1
+
+
+class TestDegenerateModules:
+    """Satellite hardening: constant-folded / empty modules must analyze to
+    an empty cost, never raise."""
+
+    def test_no_entry_returns_empty_cost(self):
+        cost = HC.analyze("not hlo at all")
+        assert cost.total_bytes == 0 and cost.flops == 0
+        assert any("no ENTRY" in w for w in cost.warnings)
+
+    def test_entry_with_zero_materialized_instructions(self):
+        # A fully constant-folded step: the entry body holds only a
+        # constant and its ROOT tuple — no materialized traffic.
+        text = "\n".join([
+            "HloModule folded",
+            "",
+            "ENTRY %main () -> (f32[]) {",
+            "  %c = f32[] constant(42)",
+            "  ROOT %t = (f32[]) tuple(%c)",
+            "}",
+        ])
+        cost = HC.analyze(text)
+        assert cost.total_bytes == 0
+        assert dict(cost.bytes_by_class) == {}
+
+    def test_walker_empty_on_degenerate_module(self):
+        from repro.workload import walk_module
+        assert walk_module("not hlo at all") == []
+
+
+class TestScaled:
+    """Satellite fix: scaled(0.0) must drop class keys, not keep stale
+    zero-valued entries (LSU groups are keyed off class *names*)."""
+
+    def test_scaled_zero_drops_classes(self):
+        c = HC.HloCost()
+        c.bytes_by_class["gather"] = 512.0
+        c.collective_by_kind["all-reduce"] = 64.0
+        c.flops = 100.0
+        z = c.scaled(0.0)
+        assert dict(z.bytes_by_class) == {}
+        assert dict(z.collective_by_kind) == {}
+        assert z.flops == 0.0 and z.total_bytes == 0.0
+
+    def test_add_after_zero_scaling(self):
+        a = HC.HloCost()
+        a.bytes_by_class["stream"] = 100.0
+        b = a.scaled(0.0)
+        b.add(a.scaled(2.0))
+        assert dict(b.bytes_by_class) == {"stream": 200.0}
+        # defaultdict behavior intact after the scaled(0) path
+        assert b.bytes_by_class["gather"] == 0.0
+
+    def test_scaled_nonzero_unchanged(self):
+        a = HC.HloCost()
+        a.bytes_by_class["strided"] = 10.0
+        s = a.scaled(3.0)
+        assert dict(s.bytes_by_class) == {"strided": 30.0}

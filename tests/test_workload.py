@@ -1,0 +1,288 @@
+"""Whole-model estimation subsystem (repro.workload).
+
+Covers the acceptance invariants: walker decomposition sums to the
+aggregate analysis, composed phase totals equal the sum of per-op
+Session.estimate calls (1e-6, all three backends), and model sweeps
+stream bit-equal to materialized evaluation (any chunking, JSON
+round-trip included).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import hw
+from repro import workload as wl
+from repro.core import hlo_counter as HC
+from repro.core import stream as ST
+
+BACKENDS = ("scalar", "numpy-batch", "jax-jit")
+
+
+@pytest.fixture(scope="module")
+def toy_cfg():
+    from repro.configs import ARCHS, reduced_config
+
+    # 2-layer toy model (the ISSUE's composition target).
+    name = sorted(ARCHS)[0]
+    return reduced_config(ARCHS[name], layers_scale=2)
+
+
+@pytest.fixture(scope="module")
+def phase_texts(toy_cfg):
+    from repro.workload import steps
+
+    return {p: steps.phase_hlo(toy_cfg, p, batch=2, seq_len=32)
+            for p in ("train", "decode")}
+
+
+# ---------------------------------------------------------------------------
+# walker
+# ---------------------------------------------------------------------------
+
+class TestWalker:
+    def test_records_sum_to_aggregate_analysis(self, phase_texts):
+        for text in phase_texts.values():
+            recs = wl.walk_module(text)
+            agg = HC.analyze(text)
+            assert sum(r.total_bytes for r in recs) == pytest.approx(
+                agg.total_bytes, rel=1e-9)
+            assert sum(r.flops for r in recs) == pytest.approx(
+                agg.flops, rel=1e-9)
+            by_class = {}
+            for r in recs:
+                for k, v in r.bytes_by_class.items():
+                    by_class[k] = by_class.get(k, 0.0) + v
+            for k, v in agg.bytes_by_class.items():
+                assert by_class.get(k, 0.0) == pytest.approx(v, rel=1e-9)
+
+    def test_scan_ops_carry_trip_multiplier(self, phase_texts, toy_cfg):
+        recs = wl.walk_module(phase_texts["decode"])
+        # the layer scan shows up as records with trips > 1
+        assert any(r.trips > 1 for r in recs)
+        assert all(r.trips >= 1 for r in recs)
+
+    def test_op_classes_in_taxonomy(self, phase_texts):
+        recs = wl.walk_module(phase_texts["train"])
+        assert recs, "train step walked to zero records"
+        assert {r.op_class for r in recs} <= set(wl.OP_CLASSES)
+        assert any(r.op_class == "matmul" for r in recs)
+
+    def test_paths_unique(self, phase_texts):
+        recs = wl.walk_module(phase_texts["train"])
+        # scoped paths give each record a stable identity for reports
+        assert len({r.path for r in recs}) == len(recs)
+
+
+# ---------------------------------------------------------------------------
+# composition (the acceptance bit-equality)
+# ---------------------------------------------------------------------------
+
+class TestComposition:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_total_equals_sum_of_per_op_estimates(self, phase_texts,
+                                                  backend):
+        sess = repro.Session(backend=backend)
+        rep = sess.estimate_model(phase_texts)
+        assert rep.phase_names == ("train", "decode")
+        for phase in rep.phases:
+            assert phase.ops, f"{phase.name} composed zero scored ops"
+            parts = sum(sess.estimate(op.design).t_exe for op in phase.ops)
+            assert phase.t_total == pytest.approx(parts, rel=1e-6)
+        assert rep.total_latency() == pytest.approx(
+            sum(p.t_total for p in rep.phases), rel=1e-12)
+
+    def test_backends_agree(self, phase_texts):
+        totals = [repro.Session(backend=b).estimate_model(
+            phase_texts).total_latency() for b in BACKENDS]
+        for t in totals[1:]:
+            assert t == pytest.approx(totals[0], rel=1e-6)
+
+    def test_report_breakdowns(self, phase_texts):
+        rep = repro.Session().estimate_model(phase_texts)
+        ph = rep.phase("train")
+        by_class = ph.by_class()
+        assert sum(d["t_exe"] for d in by_class) == pytest.approx(
+            ph.t_total, rel=1e-9)
+        assert sum(d["share"] for d in by_class) == pytest.approx(1.0)
+        layers = ph.by_layer()
+        assert sum(d["t_exe"] for d in layers) == pytest.approx(
+            ph.t_total, rel=1e-9)
+        rows = rep.rows()
+        assert rows and rep.to_csv().count("\n") == len(rows) + 1
+        s = rep.summary()
+        assert set(s["split"]) == {"train", "decode"}
+        assert s["split"]["train"] + s["split"]["decode"] == pytest.approx(1)
+
+    def test_config_input_path(self, toy_cfg):
+        sess = repro.Session()
+        rep = sess.estimate_model(toy_cfg, phases=("decode",), batch=1,
+                                  seq_len=16)
+        assert rep.name == toy_cfg.name
+        assert rep.total_latency("decode") > 0
+
+    def test_callable_input_path(self):
+        import jax.numpy as jnp
+
+        import jax
+
+        def f(x, w):
+            return jnp.tanh(x @ w)
+
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+                 for s in [(64, 128), (128, 128)]]
+        rep = repro.Session().estimate_model(f, *specs)
+        assert rep.phase_names == ("step",)
+        assert rep.total_latency() > 0
+
+    def test_bad_input_raises(self):
+        with pytest.raises(TypeError):
+            repro.Session().estimate_model(12345)
+
+    def test_flops_only_ops_enter_compute_term(self, phase_texts):
+        rep = repro.Session().estimate_model(phase_texts)
+        ph = rep.phase("train")
+        assert ph.t_compute > 0
+        assert ph.flops > 0
+
+
+# ---------------------------------------------------------------------------
+# model sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def plan(phase_texts):
+    return repro.Session().plan_model(
+        phase_texts, phases=("train", "decode"), batch=(2,), seq_len=(32,),
+        shards=(1, 2, 4), hardware=(None, "tpu_v5e"), chunk_size=4)
+
+
+class TestModelSweep:
+    def test_streaming_bit_equals_materialized(self, plan):
+        full = plan.materialize()
+        rep = repro.Session().sweep_model(plan=plan, chunk_size=4)
+        assert rep.streaming and rep.n_points == plan.n
+        ids = rep.cols["id"].astype(np.int64)
+        for k in full:
+            assert np.array_equal(np.asarray(full[k])[ids], rep.cols[k]), k
+
+    def test_any_chunking_bit_equal(self, plan):
+        full = plan.materialize()
+        for cs in (1, 3, 7, plan.n):
+            ev = ST.run_stream(plan.n, cs, plan.evaluator(),
+                               [ST.StatsReducer()])
+            stats = ev.reducers[0]
+            assert stats.t_exe_sum == pytest.approx(
+                float(np.sum(full["t_exe"])), rel=1e-12)
+            assert int(stats.summary()["n_points"]) == plan.n
+
+    def test_materialized_report_holds_all_points(self, plan):
+        rep = repro.Session().sweep_model(plan=plan)
+        assert not rep.streaming and len(rep) == plan.n
+        best = rep.best()
+        assert best["t_exe"] == pytest.approx(
+            float(np.min(rep.cols["t_exe"])))
+        assert best["phase"] in ("train", "decode")
+
+    def test_json_round_trip_bit_equal(self, plan):
+        plan2 = wl.ModelSweepPlan.from_json(plan.to_json())
+        a, b = plan.materialize(), plan2.materialize()
+        for k in a:
+            assert np.array_equal(a[k], b[k]), k
+        # canonical text is stable
+        assert plan.to_json() == plan2.to_json()
+
+    def test_plan_is_picklable(self, plan):
+        import pickle
+
+        plan2 = pickle.loads(pickle.dumps(plan))
+        a, b = plan.materialize(), plan2.materialize()
+        for k in a:
+            assert np.array_equal(a[k], b[k]), k
+
+    def test_hardware_axis_changes_scores(self, plan):
+        cols = plan.materialize()
+        base = cols["t_exe"][cols["hardware"] == 0]
+        tpu = cols["t_exe"][cols["hardware"] == 1]
+        assert not np.allclose(base, tpu)
+
+    def test_shards_divide_traffic(self, plan):
+        cols = plan.materialize()
+        dec = (cols["phase"] == list(plan.lists["phase"]).index("decode"))
+        one = cols["total_bytes"][dec & (cols["shards"] == 1)]
+        four = cols["total_bytes"][dec & (cols["shards"] == 4)]
+        # decode has no all-reduce term: traffic scales ~1/shards
+        # (up to access-granularity rounding)
+        assert np.all(four < one)
+
+    def test_train_sharding_adds_allreduce(self, phase_texts, toy_cfg):
+        from repro.workload import steps
+
+        sess = repro.Session()
+        p = sess.plan_model(toy_cfg, phases=("train",), batch=(2,),
+                            seq_len=(16,), shards=(1, 8))
+        kernels1, _ = p._point_kernels("train", 2, 16, 1)
+        kernels8, _ = p._point_kernels("train", 2, 16, 8)
+        assert len(kernels8) == len(kernels1) + 1
+        assert p.param_bytes == steps.param_bytes(toy_cfg)
+
+    def test_sweep_point_matches_estimate_model(self, phase_texts):
+        # shards=1, hardware=None point must reproduce the composed total
+        sess = repro.Session()
+        p = sess.plan_model(phase_texts, phases=("decode",), batch=(2,),
+                            seq_len=(32,))
+        cols = p.materialize()
+        assert len(cols["id"]) == 1
+        total = sess.estimate_model(
+            {"decode": phase_texts["decode"]}).total_latency()
+        assert float(cols["t_exe"][0]) == pytest.approx(total, rel=1e-9)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_sweep_backends_agree(self, phase_texts, backend):
+        sess = repro.Session(backend=backend)
+        p = sess.plan_model(phase_texts, phases=("decode",), batch=(2,),
+                            seq_len=(32,), shards=(1, 2))
+        cols = p.materialize()
+        ref = repro.Session(backend="scalar").plan_model(
+            phase_texts, phases=("decode",), batch=(2,), seq_len=(32,),
+            shards=(1, 2)).materialize()
+        np.testing.assert_allclose(cols["t_exe"], ref["t_exe"], rtol=1e-6)
+
+    def test_hardware_name_resolution(self, phase_texts):
+        p = repro.Session().plan_model(
+            phase_texts, phases=("decode",), batch=(2,), seq_len=(32,),
+            hardware=("tpu_v4",))
+        assert p.lists["hardware"][0] is hw.get("tpu_v4")
+        with pytest.raises(KeyError):
+            repro.Session().plan_model(
+                phase_texts, phases=("decode",), batch=(2,), seq_len=(32,),
+                hardware=("no_such_board",))
+
+    def test_calibrated_session_scales_base_points(self, phase_texts):
+        sess = repro.Session()
+        cal = repro.Session(calibration_factor=2.0)
+        a = sess.plan_model(phase_texts, phases=("decode",), batch=(2,),
+                            seq_len=(32,)).materialize()
+        b = cal.plan_model(phase_texts, phases=("decode",), batch=(2,),
+                           seq_len=(32,)).materialize()
+        assert float(b["t_exe"][0]) == pytest.approx(
+            2.0 * float(a["t_exe"][0]), rel=1e-12)
+
+
+class TestSessionSurface:
+    def test_methods_are_session_level(self):
+        # conventions: entry points live on Session, never module-level
+        assert hasattr(repro.Session, "estimate_model")
+        assert hasattr(repro.Session, "plan_model")
+        assert hasattr(repro.Session, "sweep_model")
+        assert not hasattr(wl, "estimate_model")
+
+    def test_public_exports(self):
+        for name in ("ModelReport", "PhaseReport", "OpRecord",
+                     "ModelSweepPlan", "ModelSweepReport"):
+            assert name in repro.__all__ and hasattr(repro, name)
+
+    def test_sweep_model_requires_input(self):
+        with pytest.raises(ValueError):
+            repro.Session().sweep_model()
