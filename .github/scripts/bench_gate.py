@@ -25,6 +25,13 @@ notice; that shared-core case is tracked by the recorded absolute numbers
 in the artifact but cannot be hard-gated without a model-independent
 machine probe.
 
+The device-resident pipeline gates on the ``stream_10m`` rows: every
+row's ``agree_device_host`` flag (jax-jit device folds vs the numpy-batch
+host fold on the 10,240,000-point grid) must be true — judged in-run,
+machine-independent, never excused — and per-backend points/sec ratchets
+against the committed baseline with the stream_1m materialized-baseline
+row as the machine-slowdown control.
+
 The distributed executor gates on the ``stream_dist`` rows:
 
 * correctness invariant, judged in-run: every row's ``agree`` flag (the
@@ -179,6 +186,74 @@ def check_dist(fresh_payload: dict, base_payload: dict | None,
                 f"stream_dist[w{w}]: {got:,.0f} pps is >{TOLERANCE:.0%} "
                 f"below the committed {want:,.0f} pps"
                 + ("" if w == 1 else " without a matching w1 slowdown"))
+
+
+def stream10_rows(payload: dict) -> dict[str, dict]:
+    rows = (payload.get("details") or {}).get("stream_10m") or []
+    return {r["backend"]: r for r in rows}
+
+
+def check_stream10(fresh_payload: dict, base_payload: dict | None,
+                   failures: list[str]) -> None:
+    """Gate the 10M-point device-vs-host streaming rows.
+
+    * agreement invariant, judged in-run and machine-independent: every
+      row's ``agree_device_host`` flag (the device-resident jax-jit
+      pipeline vs the numpy-batch host fold — front membership exact,
+      top-k rows and ``t_exe_min`` at 1e-6) must be true — a false flag
+      is a fold bug, never a machine artifact, and fails unconditionally;
+    * ratchet vs the committed baseline: per-backend points/sec more than
+      ``TOLERANCE`` below the committed value fails, unless the stream_1m
+      ``materialized-baseline`` control slowed past the same tolerance in
+      this run too (slower machine, not a pipeline regression).
+    """
+    fresh = stream10_rows(fresh_payload)
+    if not fresh:
+        print("bench gate: stream_10m: no rows in fresh artifact — skipped")
+        return
+    # 1. in-run agreement invariant — never excused
+    for backend, row in sorted(fresh.items()):
+        if not row.get("agree_device_host", False):
+            failures.append(
+                f"stream_10m[{backend}]: device pipeline != host fold at "
+                f"10M points (agreement contract broken)")
+    if all(r.get("agree_device_host", False) for r in fresh.values()):
+        print(f"bench gate: stream_10m: device == host fold across "
+              f"{len(fresh)} backend(s) -> OK")
+    # 2. ratchet vs the committed baseline, with the stream_1m
+    #    materialized-baseline machine control
+    base = stream10_rows(base_payload) if base_payload else {}
+    if not base:
+        print("bench gate: stream_10m: no committed baseline — passing "
+              "(first run records it)")
+        return
+    fresh_base = baseline_pps(fresh_payload)
+    committed_base = baseline_pps(base_payload) if base_payload else None
+    machine_slow = (fresh_base is not None and committed_base is not None
+                    and fresh_base < (1.0 - TOLERANCE) * committed_base)
+    for backend, row in sorted(fresh.items()):
+        ref = base.get(backend)
+        if ref is None:
+            print(f"bench gate: stream_10m[{backend}]: no committed "
+                  f"baseline — skipped")
+            continue
+        got = float(row["points_per_sec"])
+        want = float(ref["points_per_sec"])
+        floor = (1.0 - TOLERANCE) * want
+        if got >= floor:
+            print(f"bench gate: stream_10m[{backend}]: {got:,.0f} pps vs "
+                  f"committed {want:,.0f} pps (floor {floor:,.0f}) -> OK")
+        elif machine_slow:
+            print(f"bench gate: stream_10m[{backend}]: {got:,.0f} pps "
+                  f"below the {floor:,.0f} floor, but the stream_1m "
+                  f"materialized control slowed too ({fresh_base:,.0f} vs "
+                  f"committed {committed_base:,.0f} pps) — slower machine, "
+                  f"not a pipeline regression -> OK")
+        else:
+            failures.append(
+                f"stream_10m[{backend}]: {got:,.0f} pps is "
+                f">{TOLERANCE:.0%} below the committed {want:,.0f} pps "
+                f"without a matching machine slowdown")
 
 
 def optimize_row(payload: dict) -> dict | None:
@@ -363,6 +438,7 @@ def main() -> int:
 
     failures: list[str] = []
     check_serve(fresh_payload, base_payload, failures)
+    check_stream10(fresh_payload, base_payload, failures)
     check_dist(fresh_payload, base_payload, failures)
     check_optimize(fresh_payload, base_payload, failures)
     check_model(fresh_payload, base_payload, failures)

@@ -10,6 +10,8 @@ Usage:
 ``--smoke`` runs only the fast, simulator-free subset (paper Table IV,
 Fig. 5 stride, a reduced design-space sweep, the 1M-point streaming
 sweep whose per-backend points/sec + peak RSS feed the CI perf gate,
+the 10M-point device-vs-host streaming sweep (jax-jit pipeline against
+the numpy-batch fold, agreement-gated),
 the distributed-sweep scaling bench at 1/2/4 process workers,
 the 32-client serving-latency bench whose p50/p99 feed the CI latency
 gate, and the whole-model ``model_e2e`` bench — transformer train +
@@ -102,6 +104,13 @@ def main() -> None:
         rows, us = PT.timed(lambda: SB.stream_bench(session=session))
         details["stream_1m"] = rows
         summary.append(("stream_1m", us, _derive("stream_1m", rows)))
+
+        # 10M-point streaming sweep: the device-resident jax-jit pipeline
+        # vs the numpy-batch host fold at a scale too large to materialize
+        # (device==host agreement + per-backend points/sec feed the gate).
+        rows, us = PT.timed(lambda: SB.stream10_bench(session=session))
+        details["stream_10m"] = rows
+        summary.append(("stream_10m", us, _derive("stream_10m", rows)))
 
         # distributed streaming sweep: the same 1M-point grid through the
         # coordinator/worker process pool at 1/2/4 workers (points/sec +
@@ -213,6 +222,14 @@ def _derive(name: str, rows: list[dict]) -> str:
                  f"{r['peak_rss_mb']:.0f}MB" for r in rows]
         agree = all(r["agree_1e6"] for r in rows)
         return f"points={rows[0]['n_points']} {' '.join(parts)} agree={agree}"
+    if name == "stream_10m":
+        parts = [f"{r['backend']}={r['points_per_sec']:,.0f}pps/"
+                 f"{r['peak_rss_mb']:.0f}MB" for r in rows]
+        agree = all(r["agree_device_host"] for r in rows)
+        dev = next((r for r in rows if r["backend"] == "jax-jit"), None)
+        su = f" device_speedup={dev['speedup_vs_host']}x" if dev else ""
+        return (f"points={rows[0]['n_points']} {' '.join(parts)}"
+                f"{su} agree_device_host={agree}")
     if name == "stream_dist":
         parts = [f"w{r['workers']}={r['points_per_sec']:,.0f}pps"
                  f"(x{r['speedup_vs_1worker']})" for r in rows]

@@ -68,6 +68,15 @@ STREAM_AXES = dict(
     bsp=[STRATIX10_BSP, BspParams(burst_cnt=5, max_th=64)],
 )
 
+#: 10,240,000-point grid (STREAM_AXES with n_ga widened to 1..100) for the
+#: device-pipeline scale benchmark.  Materializing this space is off the
+#: table (~GBs of columns), so ``stream10_bench`` checks the two streaming
+#: backends against *each other* instead of a materialized baseline.
+STREAM10_AXES = dict(STREAM_AXES, n_ga=list(range(1, 101)))
+
+#: Named streaming grids the subprocess workers can rebuild by name.
+STREAM_GRIDS = {"1m": STREAM_AXES, "10m": STREAM10_AXES}
+
 
 def scalar_loop(res: SweepResult, session: Session | None = None) -> np.ndarray:
     """Score every point of ``res``'s design space with the scalar path."""
@@ -132,22 +141,35 @@ def sweep_speedup(axes: dict | None = None, *,
 
 
 def _peak_rss_mb() -> float:
-    """Process high-water RSS in MB (Linux reports KB).
+    """Process high-water RSS in MB.
 
     ``ru_maxrss`` is a process-*lifetime* high-water mark, which is why
     ``stream_bench`` runs each streaming backend in its own subprocess:
     measured in-process, every run after the first would report the
     earlier run's peak.
+
+    On Linux, prefer ``VmHWM`` from /proc/self/status: ``ru_maxrss`` also
+    folds in the watermark of the pre-exec address space, so a worker
+    forked from a parent that has already ballooned (e.g. the materialized
+    1M baseline) would inherit the parent's peak.  ``VmHWM`` tracks the
+    current mm only, which is fresh after exec.
     """
     import resource
     import sys
 
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
     rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
     return rss / (1 << 20) if sys.platform == "darwin" else rss / 1024.0
 
 
-def _stream_axes_for(session: Session) -> dict:
-    axes = dict(STREAM_AXES)
+def _stream_axes_for(session: Session, grid: str = "1m") -> dict:
+    axes = dict(STREAM_GRIDS[grid])
     if session.hardware is not None:    # --hw pins the memory system
         axes.pop("dram", None)
         axes.pop("bsp", None)
@@ -188,7 +210,7 @@ def _stream_once(sess: Session, axes: dict, chunk_size: int, k: int) -> dict:
 
 
 def _stream_worker(backend: str, chunk_size: int, k: int,
-                   hw_name: str) -> None:
+                   hw_name: str, grid: str = "1m") -> None:
     """Subprocess entry: run one backend's streaming sweep, print JSON."""
     import json
 
@@ -198,12 +220,12 @@ def _stream_worker(backend: str, chunk_size: int, k: int,
 
         sess = sess.with_hardware(hwreg.get(hw_name))
     rec = _stream_once(sess.with_backend(backend),
-                       _stream_axes_for(sess), chunk_size, k)
+                       _stream_axes_for(sess, grid), chunk_size, k)
     print(json.dumps(rec))
 
 
 def _run_stream_worker(backend: str, chunk_size: int, k: int,
-                       hw_name: str) -> dict:
+                       hw_name: str, grid: str = "1m") -> dict:
     import json
     import os
     import pathlib
@@ -219,7 +241,7 @@ def _run_stream_worker(backend: str, chunk_size: int, k: int,
     warn_args = [a for opt in sys.warnoptions for a in ("-W", opt)]
     out = subprocess.run(
         [sys.executable, *warn_args, "-m", "benchmarks.sweep_bench",
-         "--stream-worker", backend, str(chunk_size), str(k), hw_name],
+         "--stream-worker", backend, str(chunk_size), str(k), hw_name, grid],
         capture_output=True, text=True, cwd=root, env=env)
     if out.returncode != 0:
         raise RuntimeError(f"stream worker {backend} failed:\n"
@@ -335,6 +357,69 @@ def stream_bench(axes: dict | None = None, *, chunk_size: int = 1 << 17,
         "speedup_vs_materialized": 1.0,
         "agree_1e6": True,
     })
+    return rows
+
+
+def stream10_bench(*, chunk_size: int = 1 << 17, k: int = 10,
+                   backends=("jax-jit", "numpy-batch"),
+                   session: Session | None = None) -> list[dict]:
+    """Device-pipeline scale benchmark: 10,240,000 points, no materialization.
+
+    Streams :data:`STREAM10_AXES` through the device-resident jax-jit
+    pipeline and the numpy-batch host fold (each in its own subprocess, for
+    the same peak-RSS isolation reasons as ``stream_bench``).  The grid is
+    10x too large to materialize as the agreement reference, so the two
+    backends are checked against *each other*: ``agree_device_host`` on the
+    jax-jit row requires Pareto-front membership to match the host fold
+    exactly and top-k rows / ``t_exe_min`` to agree within rtol 1e-6 (the
+    folds are bit-equal by contract — tests/test_device_stream.py — so the
+    tolerance only absorbs jit fusion reassociation, e.g. FMA contraction).
+    bench_gate.py fails the build unconditionally on a false flag.
+    """
+    sess0 = session or Session()
+    hw_name = sess0.hardware.name if sess0.hardware is not None else "-"
+    import repro.hw as hwreg
+
+    if hw_name != "-":
+        reconstructable = (_hw_registered(hw_name)
+                           and sess0 == Session().with_hardware(
+                               hwreg.get(hw_name)))
+    else:
+        reconstructable = sess0 == Session()
+    axes = _stream_axes_for(sess0, "10m")
+
+    streamed: dict[str, dict] = {}
+    for b in backends:
+        if reconstructable:
+            streamed[b] = _run_stream_worker(b, chunk_size, k, hw_name,
+                                             grid="10m")
+        else:
+            streamed[b] = _stream_once(sess0.with_backend(b), axes,
+                                       chunk_size, k)
+
+    # numpy-batch is the host reference every other backend must agree with.
+    ref = streamed["numpy-batch"]
+    rows = []
+    for b, rec in streamed.items():
+        st, rst = rec["stats"], ref["stats"]
+        agree = (
+            rec["front_ids"] == ref["front_ids"]
+            and _rows_close(rec["top_rows"], ref["top_rows"])
+            and st["n_points"] == rst["n_points"]
+            and st["memory_bound_points"] == rst["memory_bound_points"]
+            and abs(st["t_exe_min"] - rst["t_exe_min"])
+                <= 1e-6 * abs(rst["t_exe_min"])
+        )
+        rows.append({
+            "backend": b,
+            "n_points": rec["n_points"],
+            "chunk_size": chunk_size,
+            "seconds": round(rec["seconds"], 3),
+            "points_per_sec": round(rec["n_points"] / rec["seconds"], 1),
+            "peak_rss_mb": round(rec["peak_rss_mb"], 1),
+            "speedup_vs_host": round(ref["seconds"] / rec["seconds"], 2),
+            "agree_device_host": bool(agree),
+        })
     return rows
 
 
@@ -555,7 +640,8 @@ def main() -> None:
     argv = sys.argv[1:]
     if argv[:1] == ["--stream-worker"]:
         backend, chunk_size, k, hw_name = argv[1:5]
-        _stream_worker(backend, int(chunk_size), int(k), hw_name)
+        grid = argv[5] if len(argv) > 5 else "1m"
+        _stream_worker(backend, int(chunk_size), int(k), hw_name, grid)
         return
     if argv[:1] == ["--dist-worker"]:
         workers, chunk_size, k, hw_name = argv[1:5]
@@ -565,6 +651,8 @@ def main() -> None:
     for row in rows:
         print(", ".join(f"{k}={v}" for k, v in row.items()))
     for row in stream_bench():
+        print(", ".join(f"{k}={v}" for k, v in row.items()))
+    for row in stream10_bench():
         print(", ".join(f"{k}={v}" for k, v in row.items()))
     for row in stream_dist():
         print(", ".join(f"{k}={v}" for k, v in row.items()))

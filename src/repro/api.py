@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from time import perf_counter as _perf_counter
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -439,6 +440,8 @@ class SweepReport(_sweep.SweepResult, Report):
     # custom Reducer subclasses read their accumulated state back here
     # -- constraint telemetry (None on an unconstrained sweep) -------------
     n_candidates: int | None = None   # points enumerated before feasibility
+    # -- per-stage timing (None unless swept with profile=True) ------------
+    profile: Mapping[str, Any] | None = None
     kind = "sweep"
 
     @property
@@ -555,12 +558,15 @@ class SweepReport(_sweep.SweepResult, Report):
             # the feasible/total split of a constrained sweep
             out["n_candidates"] = int(self.n_candidates)
             out["n_feasible"] = out["n_points"]
+        if self.profile is not None:
+            out["profile"] = dict(self.profile)
         return out
 
 
 def _stream_report(outcome, tables: Mapping[str, list], *,
                    backend: str,
-                   n_candidates: int | None = None) -> SweepReport:
+                   n_candidates: int | None = None,
+                   profile: Mapping[str, Any] | None = None) -> SweepReport:
     """Fold a :class:`repro.core.stream.StreamOutcome` into a SweepReport.
 
     Survivors = union of the Pareto reducer's front and the top-k rows,
@@ -625,7 +631,7 @@ def _stream_report(outcome, tables: Mapping[str, list], *,
         topk_idx=(np.searchsorted(ids, topk.ids)
                   if topk is not None else None),
         topk_key=topk.key if topk is not None else None,
-        reducers=outcome.reducers)
+        reducers=outcome.reducers, profile=profile)
 
 
 class AutotuneReport(Report):
@@ -918,7 +924,7 @@ class Session:
     def sweep(self, space: "Space | Mapping[str, Any] | None" = None, *,
               chunk_size: int | None = None, reducers=None,
               workers: int | None = None, executor: str = "threads",
-              constraints=(),
+              constraints=(), profile: bool = False,
               **axes) -> SweepReport:
         """Score a whole design space through this session's backend.
 
@@ -957,6 +963,14 @@ class Session:
         points are never evaluated), random spaces rejection-sample, and
         the report's ``summary()`` carries the feasible/candidate split.
         Results are bit-equal to post-filtering the unconstrained sweep.
+
+        ``profile=True`` records a per-stage wall-time breakdown
+        (``enumerate``/``transfer``/``score``/``reduce`` seconds, plus the
+        pipeline path taken) on ``report.profile`` and in
+        ``report.summary()["profile"]`` — the numbers that make a
+        points/sec regression attributable to a stage.  Profiling
+        serializes the chunk pipeline (per-stage walls need sync points),
+        so profiled throughput is a lower bound on the unprofiled run.
         """
         space = self._as_space(space, axes)
         if constraints:
@@ -994,9 +1008,13 @@ class Session:
                 raise TypeError("streaming sweeps need a grid space; "
                                 "Space.random materializes its draws")
             return self._sweep_stream(space, int(chunk), reducers, workers,
-                                      executor, constraints)
+                                      executor, constraints, profile)
+        prof = {"path": "materialized"} if profile else None
+        t0 = _perf_counter() if profile else 0.0
         points, n, cats = space.points(dram=self.dram, bsp=self.bsp,
                                        constraints=constraints)
+        if profile:
+            prof["enumerate_s"] = _perf_counter() - t0
         n_candidates = None
         if constraints and space.is_grid:
             # Mask the enumerated grid before anything is scored; scoring
@@ -1016,11 +1034,14 @@ class Session:
             n = int(np.count_nonzero(mask))
             if n == 0:
                 return self._empty_report(cats, n_candidates)
+        t0 = _perf_counter() if profile else 0.0
         if self.backend == "scalar":
             result = self._sweep_scalar(points, n, cats)
         else:
             result = _sweep._build(points, n, cats,
                                    estimator=self._estimator())
+        if profile:
+            prof["score_s"] = _perf_counter() - t0
         est = result.estimate
         if self.calibration_factor != 1.0:
             # The session factor belongs to the *session's* hardware; points
@@ -1036,7 +1057,7 @@ class Session:
                 t_ovh=np.asarray(est.t_ovh) * c)
         return SweepReport(points=result.points, estimate=est,
                            resource=result.resource, backend=self.backend,
-                           n_candidates=n_candidates)
+                           n_candidates=n_candidates, profile=prof)
 
     def _empty_report(self, cats: dict,
                       n_candidates: int | None) -> SweepReport:
@@ -1064,7 +1085,8 @@ class Session:
 
     def _sweep_stream(self, space: "Space", chunk_size: int, reducers,
                       workers: int | None, executor: str = "threads",
-                      constraints: tuple = ()) -> SweepReport:
+                      constraints: tuple = (),
+                      profile: bool = False) -> SweepReport:
         """Chunked, reducer-folded evaluation of a grid space.
 
         A thin consumer of :class:`SweepPlan`: the plan carries the
@@ -1074,6 +1096,14 @@ class Session:
         process (``threads``) or across the coordinator/worker pool
         (``processes``).  Peak memory is O(chunk + front + k); survivor
         rows (front + top-k) are the only points materialized.
+
+        On the jax-jit backend an unconstrained sweep with the standard
+        reducers takes the **device-resident fast path**
+        (:mod:`repro.core.device_stream`): enumeration, Eqs. 1-10 scoring
+        and the reducer folds fuse into one jit-compiled chunk step, with
+        reducer state pulled to the host once at the end — bit-equal to
+        this host pipeline, which remains the fallback (custom reducers,
+        constraints, multi-device sharding, capacity overflow).
         """
         import copy
 
@@ -1091,22 +1121,47 @@ class Session:
         if not any(isinstance(r, _stream.StatsReducer) for r in reducers):
             reducers += (_stream.StatsReducer(),)
 
+        prof: dict | None = {} if profile else None
+        t0 = _perf_counter() if profile else 0.0
+        outcome = None
         if executor == "processes":
             from repro.core import distributed as _dist
 
             outcome = _dist.run_distributed(plan, reducers, workers=workers)
+            if prof is not None:
+                # per-stage walls live in the worker processes; only the
+                # end-to-end wall is observable here
+                prof["path"] = "distributed"
         else:
-            w = workers
-            if w is None and self.backend == "numpy-batch":
-                import os
+            if self.backend == "jax-jit" and not plan.constraints:
+                from repro.core import device_stream as _dev
 
-                w = min(4, os.cpu_count() or 1)
-            outcome = _stream.run_stream(
-                plan.n, plan.chunk_size, plan.evaluator(), reducers,
-                workers=w if self.backend == "numpy-batch" else None)
+                outcome = _dev.try_outcome(plan, reducers, profile=prof)
+            if outcome is None:
+                if prof:
+                    prof.clear()     # drop a failed device attempt's stages
+                w = workers
+                if w is None and self.backend == "numpy-batch":
+                    import os
+
+                    w = min(4, os.cpu_count() or 1)
+                if prof is not None:
+                    prof["path"] = "host-stream"
+                    # stage walls need a serial pipeline; see sweep(profile=)
+                    outcome = _stream.run_stream(
+                        plan.n, plan.chunk_size,
+                        plan.evaluator(stage_times=prof), reducers,
+                        stage_times=prof)
+                else:
+                    outcome = _stream.run_stream(
+                        plan.n, plan.chunk_size, plan.evaluator(), reducers,
+                        workers=w if self.backend == "numpy-batch" else None)
+        if prof is not None:
+            prof["total_s"] = _perf_counter() - t0
         return _stream_report(
             outcome, plan.tables(), backend=self.backend,
-            n_candidates=plan.n if plan.constraints else None)
+            n_candidates=plan.n if plan.constraints else None,
+            profile=prof)
 
     # -- optimizer-driven search -------------------------------------------
 
@@ -1424,7 +1479,8 @@ _JAX_FN = None
 
 
 def _jax_estimate_batch(batch: _mb.GroupBatch,
-                        sharding=None) -> _mb.BatchEstimate:
+                        sharding=None,
+                        stage_times: dict | None = None) -> _mb.BatchEstimate:
     """The array core under ``jax.jit`` with x64 — numerically equal to the
     NumPy path (same ops, same dtype), returned as NumPy arrays.
 
@@ -1434,6 +1490,10 @@ def _jax_estimate_batch(batch: _mb.GroupBatch,
     cross-device reduction the per-kernel segment sums need.  The function
     is compiled once per input shape, so fixed-shape streaming chunks reuse
     a single executable for the whole sweep.
+
+    With ``stage_times``, the host->device upload and the device->host
+    result pull are accumulated into ``stage_times["transfer_s"]`` (the
+    compute between them lands in the caller's score bucket).
     """
     global _JAX_FN
     import jax
@@ -1450,14 +1510,26 @@ def _jax_estimate_batch(batch: _mb.GroupBatch,
                     "total_bytes": est.total_bytes, "n_lsu": est.n_lsu,
                     "groups": est.groups}
         _JAX_FN = jax.jit(_run)
+    timed = stage_times is not None
     with enable_x64():
+        t0 = _perf_counter() if timed else 0.0
         jb = _mb.GroupBatch(**{
             f.name: (batch.n_kernels if f.name == "n_kernels"
                      else jnp.asarray(getattr(batch, f.name)))
             for f in dataclasses.fields(_mb.GroupBatch)})
         if sharding is not None:
             jb = jax.device_put(jb, sharding)
-        out = jax.tree_util.tree_map(np.asarray, _JAX_FN(jb))
+        if timed:
+            jax.block_until_ready(jb.count)
+            stage_times["transfer_s"] = (stage_times.get("transfer_s", 0.0)
+                                         + _perf_counter() - t0)
+        dev = _JAX_FN(jb)
+        if timed:
+            jax.block_until_ready(dev)
+            t0 = _perf_counter()
+        out = jax.tree_util.tree_map(np.asarray, dev)
+        if timed:
+            stage_times["transfer_s"] += _perf_counter() - t0
     groups = out.pop("groups")
     return _mb.BatchEstimate(**out, groups=groups)
 

@@ -23,6 +23,11 @@ snippets all import the *same* resolution instead of scattering per-file
   1-D leading-axis ``NamedSharding`` (built through ``make_mesh`` so the
   AxisType drift stays here); the streaming sweep engine shards each
   fixed-shape chunk batch with it.
+* ``enable_compilation_cache(dir)`` — jax's persistent compilation cache
+  under whichever config spelling this jax ships; the device-resident
+  streaming step (:mod:`repro.core.device_stream`) is recompiled per
+  (chunk size, reducer config) and every cache hit saves a full XLA
+  compile in fresh processes (benchmarks, distributed workers).
 
 The module imports jax but never touches device state at import time, so it
 is safe to import before ``XLA_FLAGS`` tricks (dry-run, subprocess tests).
@@ -138,6 +143,55 @@ def data_sharding(n: int | None = None):
     n = int(n if n is not None else local_device_count())
     mesh = make_mesh((n,), ("data",))
     return NamedSharding(mesh, PartitionSpec("data"))
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache
+# ---------------------------------------------------------------------------
+
+_COMPILATION_CACHE_ON = False
+
+
+def enable_compilation_cache(cache_dir: str | None = None) -> bool:
+    """Turn on jax's persistent (on-disk) compilation cache. Idempotent.
+
+    ``cache_dir`` defaults to ``$JAX_COMPILATION_CACHE_DIR`` or
+    ``~/.cache/repro/jax_cache``.  The min-compile-time / min-entry-size
+    thresholds are lowered where this jax supports them so even fast
+    compiles (the per-chunk-size streaming step) are cached.  Returns False
+    — never raises — when this jax has no usable cache config or the
+    directory cannot be created, so callers can treat the cache as a pure
+    optimization.
+    """
+    global _COMPILATION_CACHE_ON
+    if _COMPILATION_CACHE_ON:
+        return True
+    import os
+    path = (cache_dir
+            or os.environ.get("JAX_COMPILATION_CACHE_DIR")
+            or os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "jax_cache"))
+    try:
+        os.makedirs(path, exist_ok=True)
+    except OSError:  # pragma: no cover - unwritable home
+        return False
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(path))
+    except (AttributeError, ValueError):  # pragma: no cover - ancient jax
+        try:
+            from jax.experimental.compilation_cache import (
+                compilation_cache as _cc)
+            _cc.set_cache_dir(str(path))
+        except Exception:
+            return False
+    for flag, value in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                        ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(flag, value)
+        except (AttributeError, ValueError):  # pragma: no cover - old jax
+            pass
+    _COMPILATION_CACHE_ON = True
+    return True
 
 
 # ---------------------------------------------------------------------------

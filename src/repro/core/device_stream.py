@@ -1,0 +1,832 @@
+"""Device-resident streaming sweep: the jax-jit fast path.
+
+The host streaming loop (:func:`repro.core.stream.run_stream`) enumerates
+every chunk on the host, ships the decoded axis arrays to the device,
+scores them, ships *every* estimate column back, and folds reducers in
+NumPy — four host<->device boundary crossings per chunk.  This module
+fuses the whole chunk step into one jit-compiled function so only a
+``(start)`` scalar crosses per chunk and one reducer state crosses at the
+very end:
+
+* **In-jit enumeration** — the mixed-radix point-id -> axis decode
+  (``(ids // stride) % mod``) runs on device from a chunk-start scalar;
+  axis *value tables* (a few hundred numbers) live on device for the whole
+  sweep.  The padded-tail rule reproduces :func:`stream._chunk_ids`
+  exactly: ``ids = min(start + iota, n - 1)``.
+* **In-jit scoring** — the same two-group expansion as
+  :func:`repro.core.sweep._score` (hardware-axis resolution, inert-axis
+  normalization, Eqs. 1-10 via :func:`model_batch.estimate_batch` with
+  ``xp=jnp``), producing the identical chunk-column dict the host
+  evaluator would, on device.
+* **On-device reducer folds** — lax-based, fixed-shape carries for
+  :class:`stream.StatsReducer` (Shewchuk exact-sum partials + Chan
+  moments, replicated operation for operation), :class:`stream.TopKReducer`
+  and the 2-objective :class:`stream.ParetoReducer`.  Chunk sums go
+  through the shared position-deterministic tree sum
+  (:func:`stream._tree_sum`), which is what makes the fixed-shape
+  zero-masked device fold *bit-equal* to the host fold under any chunk
+  partition.  Selection reducers never comparator-sort the full chunk:
+  every sort key becomes an order-isomorphic int64 (:func:`_f64_key` for
+  floats, the value itself for ints), candidate lanes are picked with
+  single-operand integer sorts — a threshold cut for top-k, an exact
+  in-chunk dominance prefilter (rank / scatter-min / prefix-min) for the
+  Pareto front — and only those few lanes are re-scored (elementwise, so
+  bit-equal) and merged with the carry by a tiny exact sort.  On XLA:CPU
+  a single-operand int64 sort is ~16x faster than the multi-operand
+  float comparator sort it replaces.
+* **Overlapped dispatch** — the chunk loop enqueues step N+1 while N
+  computes (jax async dispatch; the carry is donated off-CPU so state
+  ping-pongs between two buffers), and the step executable is keyed only
+  on (chunk size, reducer config, table bucket shapes) with every grid
+  quantity passed as traced data — a warm-up sweep over a 1-point grid
+  compiles the very executable the million-point sweep runs, and
+  :func:`repro.compat.enable_compilation_cache` persists it across
+  processes.
+
+Fixed-shape carries mean two *capacity* limits the host fold does not
+have: the Pareto front cap (:data:`FRONT_CAP`) and the exact-sum partial
+count (:data:`N_PARTIALS`).  Both are tracked with on-device overflow
+flags checked before any reducer is touched; an overflow raises
+:class:`DeviceFoldOverflow` and the caller refolds the same range on the
+host path — never a silently truncated result.
+
+Everything jax lives inside functions: importing this module is
+numpy-only, and :meth:`DeviceSweep.build` returns ``None`` (host path)
+whenever jax is missing, the plan is constrained, several local devices
+are visible (the host path shards chunks across them), or the plan's axis
+values fall outside the integer/bool domain the device tables mirror
+bit-exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import model_batch as _mb
+from repro.core import stream as _stream
+from repro.core import sweep as _sweep
+
+#: Pareto front capacity of the fixed-shape device carry.  A front larger
+#: than this overflows to the host path (flagged, never truncated).
+FRONT_CAP = 4096
+
+#: Shewchuk partial slots of the on-device exact sum.  Real sweeps use 2-4;
+#: adversarial magnitude spreads overflow to the host path.
+N_PARTIALS = 16
+
+#: Axis value tables are padded (edge-replicated) to multiples of this, so
+#: every grid whose axes fit one bucket shares a single compiled step.
+_TABLE_BUCKET = 128
+
+_NUM_AXES = tuple(a for a in _sweep.AXES if a not in _sweep._CATEGORICAL)
+_DRAM_FIELDS = ("dq", "bl", "f_mem", "t_rcd", "t_rp", "t_wr")
+_BSP_FIELDS = ("burst_cnt", "max_th")
+
+#: Chunk-column order (must cover everything the host evaluator emits).
+COLUMNS = ("id",) + _sweep.AXES + _stream.ESTIMATE_COLUMNS + ("resource",)
+
+_SENT_ID = np.int64(1) << 62          # sorts after every real point id
+
+_I64MAX = np.int64(np.iinfo(np.int64).max)
+
+#: ``_f64_key(+inf)`` — the masked-lane / empty-slot sentinel for
+#: float-keyed selection, so dead lanes behave exactly like the host
+#: fold's ``+inf`` padding.
+_INFKEY = np.int64(0x7FF0000000000000)
+
+_STEP_CACHE: dict = {}
+
+
+class DeviceFoldOverflow(RuntimeError):
+    """A fixed-shape device carry ran out of capacity; refold on the host."""
+
+
+# ---------------------------------------------------------------------------
+# traced helpers (called at trace time only; jax imported lazily)
+# ---------------------------------------------------------------------------
+
+def _tree_sum_dev(x, chunk: int):
+    """Traced twin of :func:`stream._tree_sum` over a zero-masked chunk."""
+    import jax.numpy as jnp
+
+    size = 1 << (chunk - 1).bit_length()
+    if size != chunk:
+        x = jnp.concatenate([x, jnp.zeros(size - chunk, dtype=x.dtype)])
+    while size > 1:
+        x = x[0::2] + x[1::2]
+        size //= 2
+    return x[0]
+
+
+def _exact_add(parts, cnt, x):
+    """Traced twin of :meth:`stream._ExactSum.add` (grow-expansion).
+
+    ``parts`` holds ``cnt`` non-overlapping partials in slots ``[0, cnt)``;
+    the unrolled loop reads the *original* slots (like the host iterating
+    the list it mutates behind the read cursor) and compacts surviving
+    ``lo`` terms left, appending the final ``hi``.  Returns the new
+    ``(parts, cnt, overflowed)``.
+    """
+    import jax.numpy as jnp
+
+    n_slots = parts.shape[0]
+    idx = jnp.arange(n_slots, dtype=jnp.int32)
+    new_parts = jnp.zeros_like(parts)
+    i = jnp.int32(0)
+    for j in range(n_slots):
+        active = j < cnt
+        y = parts[j]
+        swap = jnp.abs(x) < jnp.abs(y)
+        big = jnp.where(swap, y, x)
+        small = jnp.where(swap, x, y)
+        hi = big + small
+        lo = small - (hi - big)
+        keep = active & (lo != 0.0)
+        new_parts = jnp.where((idx == i) & keep, lo, new_parts)
+        i = jnp.where(keep, i + jnp.int32(1), i)
+        x = jnp.where(active, hi, x)
+    overflow = i >= n_slots
+    new_parts = jnp.where(idx == i, x, new_parts)
+    return new_parts, jnp.minimum(i + jnp.int32(1), n_slots), overflow
+
+
+def _f64_key(x):
+    """Order-isomorphic int64 key of a float64 array.
+
+    ``x + 0.0`` collapses ``-0.0`` into ``+0.0`` (bit-distinct but
+    numerically equal), then the sign-aware flip makes the raw IEEE-754
+    pattern totally ordered as a signed int64: ``key(a) < key(b)`` iff
+    ``a < b`` and ``key(a) == key(b)`` iff ``a == b`` for every non-NaN
+    pair — so sorting keys is sorting values, with identical ties.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b = jax.lax.bitcast_convert_type(x + 0.0, jnp.int64)
+    return b ^ ((b >> 63) & jnp.int64(0x7FFFFFFFFFFFFFFF))
+
+
+def _col_key(v, mask):
+    """``(monotonic int64 sort key, sentinel)`` for one column.
+
+    Float columns map through :func:`_f64_key` (sentinel ``_INFKEY``,
+    the +inf key); integer/bool columns are exact as int64 (sentinel
+    ``_I64MAX``).  Key order and key ties match the host's native-dtype
+    comparisons — tighter than a float64 cast, which would round int64
+    columns above 2**53.  Masked lanes get the sentinel.
+    """
+    import jax.numpy as jnp
+
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        key, sent = _f64_key(v.astype(jnp.float64)), _INFKEY
+    else:
+        key, sent = v.astype(jnp.int64), _I64MAX
+    return jnp.where(mask, key, jnp.int64(sent)), jnp.int64(sent)
+
+
+def _score_ids(tables, ids):
+    """The in-jit twin of ``plan.evaluator()``'s ``score_ids``.
+
+    Gathers axis values from the device tables for an arbitrary id
+    vector, replicates :func:`sweep._score`'s two-group construction and
+    hardware resolution, and runs :func:`model_batch.estimate_batch` with
+    ``xp=jnp`` (``paired_kernel`` replaces each scatter-based segment sum
+    with its bit-equal two-term split add) — so every column is bit-equal
+    to the host evaluator's for the same ids.  Unused columns cost
+    nothing: callers consume what they need and XLA dead-code-eliminates
+    the rest, which is what lets the selection folds re-score only their
+    few candidate lanes.
+    """
+    import jax.numpy as jnp
+
+    chunk = ids.shape[0]
+    iota = jnp.arange(chunk, dtype=jnp.int64)
+    strides, mods = tables["strides"], tables["mods"]
+    code = {name: (ids // strides[i]) % mods[i]
+            for i, name in enumerate(_sweep.AXES)}
+    num = {k: tables["num_" + k][code[k]] for k in _NUM_AXES}
+
+    type_codes = tables["lsu_code"][code["lsu_type"]]
+    own = tables["hw_own"][code["hardware"]]
+    hw_scale = jnp.where(own, 1.0, tables["hw_hf"][code["hardware"]])
+    d_code = jnp.where(own, code["dram"], tables["len_d"] + code["hardware"])
+    b_code = jnp.where(own, code["bsp"], tables["len_b"] + code["hardware"])
+
+    n_ga, simd = num["n_ga"], num["simd"]
+    n_elems, elem_bytes = num["n_elems"], num["elem_bytes"]
+    is_atomic = type_codes == _mb.ATOMIC
+    is_ack = type_codes == _mb.WRITE_ACK
+
+    # _normalize_inert_axes, traced
+    delta = jnp.where(is_atomic | is_ack, 1, num["delta"])
+    val_constant = num["val_constant"] & is_atomic
+    include_write = num["include_write"] & ~is_atomic
+
+    g1_type = jnp.where(is_ack, _mb.ALIGNED, type_codes)
+    g1_count = jnp.where(is_atomic | is_ack, n_ga, n_ga + include_write)
+    g1_width = jnp.where(is_atomic, elem_bytes, simd * elem_bytes)
+    g1_acc = jnp.where(is_atomic, n_elems, n_elems // simd)
+    g2_count = jnp.where(is_ack & include_write, simd, 0)
+
+    vec = lambda a, b: jnp.concatenate([a, b])  # noqa: E731
+    dram_f = {k: tables["dram_" + k][d_code] for k in _DRAM_FIELDS}
+    bsp_f = {k: tables["bsp_" + k][b_code] for k in _BSP_FIELDS}
+    batch = _mb.GroupBatch(
+        kernel=vec(iota, iota),
+        n_kernels=chunk,
+        count=vec(g1_count, g2_count),
+        lsu_type=vec(g1_type, jnp.full(chunk, _mb.WRITE_ACK,
+                                       dtype=jnp.int64)),
+        ls_width=vec(g1_width, elem_bytes),
+        ls_acc=vec(g1_acc, n_elems // simd),
+        ls_bytes=vec(g1_width, elem_bytes),
+        delta=vec(delta, jnp.ones(chunk, dtype=jnp.int64)),
+        val_constant=vec(val_constant, jnp.zeros(chunk, dtype=bool)),
+        f=vec(simd, simd),
+        **{k: vec(v, v) for k, v in {**dram_f, **bsp_f}.items()},
+    )
+    est = _mb.estimate_batch(batch, xp=jnp, paired_kernel=True)
+
+    # hardware host_factor then session calibration — the same two
+    # multiplies, in the same order, as _score + evaluator() (a 1.0 scale
+    # is an exact multiplicative identity, so applying them
+    # unconditionally matches the host's conditional skips bit-for-bit).
+    cal = jnp.where(own, tables["calib"], 1.0)
+    w = (batch.count * batch.ls_width).astype(jnp.float64)
+
+    cols = {
+        "id": ids,
+        "lsu_type": code["lsu_type"],
+        "n_ga": n_ga, "simd": simd, "n_elems": n_elems, "delta": delta,
+        "elem_bytes": elem_bytes,
+        "include_write": include_write, "val_constant": val_constant,
+        "dram": d_code, "bsp": b_code, "hardware": code["hardware"],
+    }
+    for name in _stream.ESTIMATE_COLUMNS:
+        v = getattr(est, name)
+        if name in ("t_exe", "t_ideal", "t_ovh"):
+            v = (v * hw_scale) * cal
+        if name in ("total_bytes", "n_lsu"):
+            # the host's np.bincount segment sum promotes these to float64;
+            # the paired split add keeps int64 — cast to match the host
+            # column dtype exactly (values are small integers, lossless)
+            v = v.astype(jnp.float64)
+        cols[name] = v
+    # np.bincount folds (0 + w1) + w2 per point; 0 + w1 == w1 exactly.
+    cols["resource"] = w[:chunk] + w[chunk:]
+    return cols
+
+
+def _score_chunk(tables, start, chunk: int):
+    """Chunk-shaped :func:`_score_ids`: decode ids from a start scalar.
+
+    The padded-tail rule reproduces :func:`stream._chunk_ids` exactly:
+    ``ids = min(start + iota, n - 1)``.  Returns ``(cols, valid, mask)``.
+    """
+    import jax.numpy as jnp
+
+    n = tables["n"]
+    iota = jnp.arange(chunk, dtype=jnp.int64)
+    ids = jnp.minimum(start + iota, n - 1)
+    valid = jnp.minimum(jnp.int64(chunk), n - start)
+    mask = iota < valid
+    return _score_ids(tables, ids), valid, mask
+
+
+def _fold_stats(st, cols, valid, mask, chunk: int):
+    """Traced twin of :meth:`stream.StatsReducer.update` for one chunk."""
+    import jax.numpy as jnp
+
+    t = cols["t_exe"]                                   # already float64
+    tz = jnp.where(mask, t, 0.0)
+    s = _tree_sum_dev(tz, chunk)
+    tb = jnp.where(mask, cols["total_bytes"].astype(jnp.float64), 0.0)
+    mb = jnp.sum(jnp.where(mask, cols["memory_bound"],
+                           False).astype(jnp.int64))
+
+    te_parts, te_cnt, ovf1 = _exact_add(st["te_parts"], st["te_cnt"], s)
+    tb_parts, tb_cnt, ovf2 = _exact_add(st["tb_parts"], st["tb_cnt"],
+                                        _tree_sum_dev(tb, chunk))
+
+    mf = valid.astype(jnp.float64)
+    cmean = s / mf
+    cm2 = _tree_sum_dev(jnp.where(mask, (t - cmean) ** 2, 0.0), chunk)
+    # _chan_merge(n_points, mean, m2, valid, cmean, cm2), same op order
+    n_new = st["n"] + valid
+    nf = n_new.astype(jnp.float64)
+    d = cmean - st["mean"]
+    mean = st["mean"] + d * (mf / nf)
+    m2 = st["m2"] + cm2 + d * d * (st["n"].astype(jnp.float64) / nf * mf)
+
+    vals = jnp.where(mask, t, jnp.inf)
+    i = jnp.argmin(vals)                     # first occurrence, like numpy
+    v = vals[i]
+    pid = cols["id"][i]
+    better = (v < st["vmin"]) | ((v == st["vmin"]) & (pid < st["vid"]))
+    return {
+        "n": n_new, "mb": st["mb"] + mb,
+        "vmin": jnp.where(better, v, st["vmin"]),
+        "vid": jnp.where(better, pid, st["vid"]),
+        "te_parts": te_parts, "te_cnt": te_cnt,
+        "tb_parts": tb_parts, "tb_cnt": tb_cnt,
+        "mean": mean, "m2": m2,
+        "ovf": st["ovf"] | ovf1 | ovf2,
+    }
+
+
+def _fold_topk(st, cols, valid, mask, k: int, key: str, chunk: int, tables):
+    """Traced twin of :meth:`stream.TopKReducer.update` for one chunk.
+
+    Selection is by (value, id) — exactly the host's stable lexsort
+    tie-breaking — but never comparator-sorts the chunk.  Three cheap
+    passes instead:
+
+    1. a single-operand sort of the int64 keys yields the k-th smallest
+       key ``thr``;
+    2. a second single-operand sort over ``where(key < thr, lane - chunk,
+       where(key == thr, lane, big))`` packs every lane strictly below
+       the threshold (at most k-1 by the order-statistic definition)
+       ahead of the tied lanes in ascending lane (= ascending id) order,
+       so the first ``2k`` entries always contain the exact top-k —
+       arbitrary ties need no capacity flag;
+    3. the 2k candidates are re-scored (every column is an elementwise
+       function of a lane's own axis values, so re-scoring is bit-equal)
+       and merged with the carry by a tiny exact (key, id) sort.
+
+    Empty carry slots and masked lanes carry (sentinel-key, sentinel-id)
+    pairs that sort after every real row.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    kkey, sent = _col_key(cols[key], mask)
+    ids = cols["id"]
+    if k >= chunk:
+        b = chunk
+        lanes = jnp.arange(chunk, dtype=jnp.int64)
+        real = mask
+    else:
+        b = 2 * k
+        iota = jnp.arange(chunk, dtype=jnp.int64)
+        (skey,) = jax.lax.sort((kkey,), num_keys=1)
+        thr = skey[k - 1]
+        big = jnp.int64(2 * chunk)
+        ckey = jnp.where(kkey < thr, iota - chunk,
+                         jnp.where(kkey == thr, iota, big))
+        (sc,) = jax.lax.sort((ckey,), num_keys=1)
+        ent = sc[:b]
+        lanes = jnp.where(ent < 0, ent + chunk,
+                          jnp.minimum(ent, chunk - 1))
+        real = (ent < big) & mask[lanes]
+    ckk = jnp.where(real, kkey[lanes], sent)
+    cid = jnp.where(real, ids[lanes], _SENT_ID)
+    cols2 = _score_ids(tables, ids[lanes])
+    mk = jnp.concatenate([st["sortkey"], ckk])
+    mi = jnp.concatenate([st["sortid"], cid])
+    pos = jnp.arange(k + b, dtype=jnp.int64)
+    sk, si, sp = jax.lax.sort((mk, mi, pos), num_keys=2)
+    perm = sp[:k]
+    new_cols = {c: jnp.concatenate([st["cols"][c], cols2[c]])[perm]
+                for c in COLUMNS}
+    return {"cols": new_cols, "sortkey": sk[:k], "sortid": si[:k],
+            "n_seen": st["n_seen"] + valid}
+
+
+def _fold_pareto(st, cols, valid, mask, cap: int, objectives, chunk: int,
+                 tables):
+    """Traced twin of :meth:`stream.ParetoReducer.update` (2 objectives).
+
+    An exact in-chunk dominance prefilter replaces the old 3-operand
+    comparator sort over (cap + chunk) lanes: rank the v0 keys with a
+    single-operand sort + ``searchsorted``, scatter-min the v1 keys per
+    v0 group, prefix-min across groups, and drop every lane those minima
+    dominate.  The predicate is :func:`sweep._pareto_2d`'s mask
+    restricted to the chunk, and chunk-dominated implies union-dominated
+    (adding carry rows can only lower the group minima), so dropped
+    lanes can never reach the merged front; conversely every dropped
+    lane's dominator chain ends in a surviving lane (dominance is a
+    strict partial order), so the merge still flags exactly the rows the
+    host fold flags.  Survivors are compacted in ascending lane
+    (= ascending id) order, re-scored at width S (elementwise, so
+    bit-equal), and merged with the carry by `_pareto_2d` in key space
+    over (cap + S) lanes — carry rows first, which preserves the host's
+    ascending-id held order.  Empty carry slots and masked lanes hold
+    (sentinel, sentinel) keys: the host's ``+inf`` padding role.  More
+    than S chunk survivors or more than ``cap`` merged survivors sets
+    the overflow flag.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    o0, o1 = objectives
+    k0, sent0 = _col_key(cols[o0], mask)
+    k1, sent1 = _col_key(cols[o1], mask)
+    iota = jnp.arange(chunk, dtype=jnp.int64)
+
+    (s0,) = jax.lax.sort((k0,), num_keys=1)
+    g = jnp.searchsorted(s0, k0, side="left")
+    gm = jnp.full(chunk, _I64MAX, dtype=jnp.int64).at[g].min(k1)
+    cm = jax.lax.cummin(gm)
+    m_strict = jnp.where(g > 0, cm[jnp.maximum(g - 1, 0)], sent1)
+    keep = mask & ~((m_strict <= k1) | (gm[g] < k1))
+    s_count = jnp.sum(keep.astype(jnp.int64))
+
+    s_cap = min(cap, chunk)
+    big = jnp.int64(2 * chunk)
+    ckey = jnp.where(keep, iota, big)
+    (sc,) = jax.lax.sort((ckey,), num_keys=1)
+    ent = sc[:s_cap]
+    lanes = jnp.minimum(ent, chunk - 1)
+    cand = ent < big
+    cv0 = jnp.where(cand, k0[lanes], sent0)
+    cv1 = jnp.where(cand, k1[lanes], sent1)
+    cols2 = _score_ids(tables, cols["id"][lanes])
+
+    m = cap + s_cap
+    v0 = jnp.concatenate([st["v0k"], cv0])
+    v1 = jnp.concatenate([st["v1k"], cv1])
+    midx = jnp.arange(m, dtype=jnp.int64)
+    sm0, sm1, sidx = jax.lax.sort((v0, v1, midx), num_keys=3)
+
+    new_group = jnp.concatenate(
+        [jnp.ones(1, dtype=bool), sm0[1:] != sm0[:-1]])
+    group_start = jax.lax.cummax(jnp.where(new_group, midx, 0))
+    gmin = sm1[group_start]
+    cmm = jax.lax.cummin(sm1)
+    prev_end = group_start - 1
+    m_str = jnp.where(prev_end >= 0, cmm[jnp.maximum(prev_end, 0)], sent1)
+    dominated = (m_str <= sm1) | (gmin < sm1)
+
+    survives = ~dominated
+    count = jnp.sum(survives.astype(jnp.int64))
+    keep_key = jnp.where(survives, sidx, _SENT_ID)
+    (ordered,) = jax.lax.sort((keep_key,), num_keys=1)
+    perm = jnp.minimum(ordered[:cap], m - 1)      # clamp sentinels: gather-safe
+    live = jnp.arange(cap, dtype=jnp.int64) < jnp.minimum(count, cap)
+    new_cols = {c: jnp.concatenate([st["cols"][c], cols2[c]])[perm]
+                for c in COLUMNS}
+    return {
+        "cols": new_cols,
+        "v0k": jnp.where(live, v0[perm], sent0),
+        "v1k": jnp.where(live, v1[perm], sent1),
+        "count": jnp.minimum(count, cap),
+        "ovf": st["ovf"] | (count > cap) | (s_count > s_cap),
+    }
+
+
+def _get_step(chunk: int, sig: tuple):
+    """The jit-compiled fused chunk step for (chunk size, reducer config).
+
+    ``step(carry, tables, start) -> carry`` — everything else (grid
+    geometry, axis tables, calibration) is traced data, so one executable
+    serves every grid whose tables fit the same padded buckets.  The carry
+    is donated off-CPU (CPU donation is a no-op that warns).
+    """
+    import jax
+
+    key = (chunk, sig, jax.default_backend())
+    step = _STEP_CACHE.get(key)
+    if step is not None:
+        return step
+
+    def _step(carry, tables, start):
+        cols, valid, mask = _score_chunk(tables, start, chunk)
+        out = []
+        for spec, st in zip(sig, carry):
+            if spec[0] == "stats":
+                out.append(_fold_stats(st, cols, valid, mask, chunk))
+            elif spec[0] == "topk":
+                out.append(_fold_topk(st, cols, valid, mask,
+                                      spec[1], spec[2], chunk, tables))
+            else:
+                out.append(_fold_pareto(st, cols, valid, mask,
+                                        spec[1], spec[2], chunk, tables))
+        return tuple(out)
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    step = jax.jit(_step, donate_argnums=donate)
+    _STEP_CACHE[key] = step
+    return step
+
+
+# ---------------------------------------------------------------------------
+# DeviceSweep: host-side driver
+# ---------------------------------------------------------------------------
+
+def _pad_table(arr: np.ndarray) -> np.ndarray:
+    """Edge-replicate to the next :data:`_TABLE_BUCKET` multiple (padding
+    is never gathered — codes only index the true prefix)."""
+    size = -(-len(arr) // _TABLE_BUCKET) * _TABLE_BUCKET
+    if size == len(arr):
+        return arr
+    return np.concatenate([arr, np.repeat(arr[-1:], size - len(arr),
+                                          axis=0)])
+
+
+_COL_DTYPES = {
+    **{a: np.int64 for a in ("id", "lsu_type", "n_ga", "simd", "n_elems",
+                             "delta", "elem_bytes", "dram", "bsp",
+                             "hardware")},
+    # total_bytes / n_lsu are float64 on the host too: its np.bincount
+    # segment sum promotes the integer inputs
+    **{a: np.float64 for a in ("t_exe", "t_ideal", "t_ovh", "bound_ratio",
+                               "resource", "total_bytes", "n_lsu")},
+    **{a: np.bool_ for a in ("include_write", "val_constant",
+                             "memory_bound")},
+}
+
+
+class DeviceSweep:
+    """One plan's device-resident fold driver (build via :meth:`build`)."""
+
+    def __init__(self, plan: "_stream.SweepPlan", tables: dict):
+        self.plan = plan
+        self.n = plan.enumerator().n
+        self.chunk = plan.chunk_size
+        self.front_cap = FRONT_CAP
+        self._tables_host = tables
+        self._tables_dev = None
+
+    # -- eligibility --------------------------------------------------------
+
+    @classmethod
+    def build(cls, plan: "_stream.SweepPlan") -> "DeviceSweep | None":
+        """A driver for ``plan``, or ``None`` when the host path must run.
+
+        Ineligible: jax missing, non-jax backend, constrained plan,
+        several visible devices (the host path shards chunks across them),
+        an empty grid, non-integer/bool numeric axis values (the device
+        tables mirror the host's gathered dtypes exactly), or axis values
+        the host evaluator itself would reject.
+        """
+        try:
+            import jax  # noqa: F401
+        except ImportError:  # pragma: no cover - jax-less install
+            return None
+        from repro import compat as _compat
+
+        if plan.backend != "jax-jit" or plan.constraints:
+            return None
+        if _compat.local_device_count() > 1:
+            return None
+        lists = {k: list(v) for k, v in plan.lists.items()}
+        enum = _stream.GridEnumerator(lists)
+        if enum.n == 0:
+            return None
+
+        tables: dict = {
+            "strides": enum.strides.copy(),
+            "mods": enum._mod.copy(),
+            "n": np.int64(enum.n),
+            "calib": np.float64(plan.calibration_factor),
+        }
+        int_axes = ("n_ga", "simd", "n_elems", "delta", "elem_bytes")
+        for k in _NUM_AXES:
+            arr = np.asarray(lists[k])
+            want = np.bool_ if k in ("include_write",
+                                     "val_constant") else np.int64
+            if arr.dtype == object or not (
+                    np.issubdtype(arr.dtype, np.integer)
+                    or np.issubdtype(arr.dtype, np.bool_)):
+                return None
+            tables["num_" + k] = _pad_table(arr.astype(want))
+        for k in int_axes[:4]:      # host _score raises on these; let it
+            pass
+        if (tables["num_n_ga"][:len(lists["n_ga"])].min(initial=1) < 1
+                or tables["num_simd"][:len(lists["simd"])].min(
+                    initial=1) < 1
+                or tables["num_delta"][:len(lists["delta"])].min(
+                    initial=1) < 1):
+            return None
+        ne = np.asarray(lists["n_elems"], dtype=np.int64)
+        sd = np.asarray(lists["simd"], dtype=np.int64)
+        if np.any(ne[:, None] % sd[None, :]):
+            return None
+
+        try:
+            lsu_codes = np.asarray([_mb.TYPE_CODE[t]
+                                    for t in lists["lsu_type"]],
+                                   dtype=np.int64)
+        except (KeyError, TypeError):
+            return None
+        tables["lsu_code"] = _pad_table(lsu_codes)
+
+        hw_table = lists["hardware"]
+        try:
+            drams_v, bsps_v, hf, is_none = _sweep._hardware_views(hw_table)
+            all_own = bool(is_none.all())
+            # Mirror _resolve_hardware_codes: the dram/bsp tables are
+            # extended with the per-hardware views only when any spec is
+            # set; all-None leaves them (and the codes) untouched.
+            d_table = lists["dram"] + ([] if all_own else drams_v)
+            b_table = lists["bsp"] + ([] if all_own else bsps_v)
+            for k in _DRAM_FIELDS:
+                tables["dram_" + k] = _pad_table(np.asarray(
+                    [getattr(d, k) if d is not None else 0
+                     for d in d_table]))
+            for k in _BSP_FIELDS:
+                tables["bsp_" + k] = _pad_table(np.asarray(
+                    [getattr(b, k) if b is not None else 0
+                     for b in b_table]))
+        except (AttributeError, TypeError):
+            return None
+        tables["hw_own"] = _pad_table(np.asarray(is_none, dtype=bool))
+        tables["hw_hf"] = _pad_table(np.asarray(hf, dtype=np.float64))
+        tables["len_d"] = np.int64(len(lists["dram"]))
+        tables["len_b"] = np.int64(len(lists["bsp"]))
+
+        _compat.enable_compilation_cache()
+        return cls(plan, tables)
+
+    def supports(self, reducers) -> bool:
+        return self._sig(reducers) is not None
+
+    def _sig(self, reducers) -> tuple | None:
+        sig = []
+        for r in reducers:
+            if type(r) is _stream.StatsReducer:
+                sig.append(("stats",))
+            elif type(r) is _stream.TopKReducer and r.key in COLUMNS:
+                sig.append(("topk", r.k, r.key))
+            elif (type(r) is _stream.ParetoReducer
+                    and len(r.objectives) == 2
+                    and all(o in COLUMNS for o in r.objectives)):
+                sig.append(("pareto", self.front_cap, tuple(r.objectives)))
+            else:
+                return None
+        return tuple(sig)
+
+    # -- carries ------------------------------------------------------------
+
+    def _init_carry(self, sig: tuple):
+        import jax.numpy as jnp
+
+        carry = []
+        for spec in sig:
+            if spec[0] == "stats":
+                carry.append({
+                    "n": jnp.int64(0), "mb": jnp.int64(0),
+                    "vmin": jnp.float64(np.inf), "vid": jnp.int64(-1),
+                    "te_parts": jnp.zeros(N_PARTIALS, dtype=jnp.float64),
+                    "te_cnt": jnp.int32(0),
+                    "tb_parts": jnp.zeros(N_PARTIALS, dtype=jnp.float64),
+                    "tb_cnt": jnp.int32(0),
+                    "mean": jnp.float64(0.0), "m2": jnp.float64(0.0),
+                    "ovf": jnp.bool_(False),
+                })
+            elif spec[0] == "topk":
+                k = spec[1]
+                sent = (_INFKEY if _COL_DTYPES[spec[2]] is np.float64
+                        else _I64MAX)
+                carry.append({
+                    "cols": {c: jnp.zeros(k, dtype=_COL_DTYPES[c])
+                             for c in COLUMNS},
+                    "sortkey": jnp.full(k, sent, dtype=jnp.int64),
+                    "sortid": jnp.full(k, _SENT_ID, dtype=jnp.int64),
+                    "n_seen": jnp.int64(0),
+                })
+            else:
+                cap = spec[1]
+                s0, s1 = (_INFKEY if _COL_DTYPES[o] is np.float64
+                          else _I64MAX for o in spec[2])
+                carry.append({
+                    "cols": {c: jnp.zeros(cap, dtype=_COL_DTYPES[c])
+                             for c in COLUMNS},
+                    "v0k": jnp.full(cap, s0, dtype=jnp.int64),
+                    "v1k": jnp.full(cap, s1, dtype=jnp.int64),
+                    "count": jnp.int64(0),
+                    "ovf": jnp.bool_(False),
+                })
+        return tuple(carry)
+
+    # -- the fold -----------------------------------------------------------
+
+    def fold_range(self, lo: int, hi: int, reducers,
+                   profile: dict | None = None) -> None:
+        """Fold chunk-aligned ``[lo, hi)`` into ``reducers`` on device.
+
+        Same alignment contract as :meth:`SweepPlan.run_range`.  The loop
+        enqueues every chunk step without a host sync (jax async
+        dispatch); reducer state is pulled to the host exactly once.
+        Overflow flags are validated *before* any reducer is touched, so
+        on :class:`DeviceFoldOverflow` the reducers are untouched and the
+        caller can refold the identical range on the host path.
+
+        With ``profile``, each step is synchronized for honest attribution
+        (``compile_s`` first step, ``score_s`` the rest, ``transfer_s``
+        table upload + final state pull) — profiling serializes the
+        overlap on purpose.
+        """
+        import time
+
+        import jax
+        from jax.experimental import enable_x64
+
+        n, chunk = self.n, self.chunk
+        lo, hi = int(lo), min(int(hi), n)
+        if lo % chunk:
+            raise ValueError(f"range start {lo} is not chunk-aligned "
+                             f"(chunk_size={chunk})")
+        if hi % chunk and hi != n:
+            raise ValueError(f"range stop {hi} is not chunk-aligned "
+                             f"(chunk_size={chunk}) and is not the grid "
+                             f"end {n}")
+        if hi <= lo:
+            return
+        reducers = tuple(reducers)
+        sig = self._sig(reducers)
+        if sig is None:
+            raise ValueError("unsupported reducer set for the device fold; "
+                             "check supports() first")
+        step = _get_step(chunk, sig)
+
+        with enable_x64():
+            t0 = time.perf_counter()
+            if self._tables_dev is None:
+                self._tables_dev = jax.device_put(self._tables_host)
+            tables = self._tables_dev
+            carry = self._init_carry(sig)
+            if profile is not None:
+                profile.setdefault("path", "device-fused")
+                profile["transfer_s"] = (profile.get("transfer_s", 0.0)
+                                         + time.perf_counter() - t0)
+                first = True
+                for s in range(lo, hi, chunk):
+                    t0 = time.perf_counter()
+                    carry = step(carry, tables, np.int64(s))
+                    jax.block_until_ready(carry)
+                    stage = "compile_s" if first else "score_s"
+                    profile[stage] = (profile.get(stage, 0.0)
+                                      + time.perf_counter() - t0)
+                    first = False
+                profile.setdefault("enumerate_s", 0.0)   # fused in-jit
+                profile.setdefault("reduce_s", 0.0)      # fused in-jit
+                t0 = time.perf_counter()
+            else:
+                for s in range(lo, hi, chunk):
+                    carry = step(carry, tables, np.int64(s))
+            state = jax.tree_util.tree_map(np.asarray, carry)
+            if profile is not None:
+                profile["transfer_s"] += time.perf_counter() - t0
+
+        # Validate every capacity flag before touching any reducer — a
+        # partial merge would double-count when the host refolds the range.
+        for spec, st in zip(sig, state):
+            if spec[0] == "stats" and bool(st["ovf"]):
+                raise DeviceFoldOverflow(
+                    f"exact-sum partial count exceeded {N_PARTIALS}")
+            if spec[0] == "pareto" and bool(st["ovf"]):
+                raise DeviceFoldOverflow(
+                    f"pareto front exceeded the device cap {spec[1]}")
+
+        for r, spec, st in zip(reducers, sig, state):
+            if spec[0] == "stats":
+                r.merge(_stream.StatsReducer.from_state({
+                    "n_points": int(st["n"]),
+                    "memory_bound": int(st["mb"]),
+                    "t_exe_min": float(st["vmin"]),
+                    "t_exe_min_id": int(st["vid"]),
+                    "t_exe_sum":
+                        [float(p) for p in
+                         st["te_parts"][:int(st["te_cnt"])]],
+                    "total_bytes_sum":
+                        [float(p) for p in
+                         st["tb_parts"][:int(st["tb_cnt"])]],
+                    "mean": float(st["mean"]),
+                    "m2": float(st["m2"]),
+                }))
+            elif spec[0] == "topk":
+                held = min(int(st["n_seen"]), spec[1])
+                tmp = _stream.TopKReducer(spec[1], spec[2])
+                tmp.cols = {c: np.asarray(st["cols"][c][:held])
+                            for c in COLUMNS}
+                r.merge(tmp)
+            else:
+                cnt = int(st["count"])
+                tmp = _stream.ParetoReducer(spec[2])
+                tmp.cols = {c: np.asarray(st["cols"][c][:cnt])
+                            for c in COLUMNS}
+                r.merge(tmp)
+
+
+def try_outcome(plan: "_stream.SweepPlan", reducers,
+                profile: dict | None = None) -> "_stream.StreamOutcome | None":
+    """Run the whole grid device-resident, or ``None`` for the host path.
+
+    Folds ``[0, n)`` into ``reducers`` (which are only touched on success
+    — a capacity overflow returns ``None`` with the reducers pristine) and
+    returns the same :class:`stream.StreamOutcome` ``run_stream`` would.
+    """
+    dev = DeviceSweep.build(plan)
+    if dev is None:
+        return None
+    reducers = tuple(reducers)
+    if not dev.supports(reducers):
+        return None
+    n = dev.n
+    try:
+        dev.fold_range(0, n, reducers, profile=profile)
+    except DeviceFoldOverflow:
+        return None
+    return _stream.StreamOutcome(
+        reducers=reducers, n_points=n,
+        n_chunks=-(-n // plan.chunk_size), chunk_size=plan.chunk_size)

@@ -57,7 +57,13 @@ def _maybe_fault(uid: int) -> None:
 
 
 def _worker_main(plan, task_q, result_q) -> None:
-    """Worker loop: rebuild the evaluator once, fold units until sentinel.
+    """Worker loop: build the range folder once, fold units until sentinel.
+
+    The folder (:func:`repro.core.stream.make_range_folder`) takes the
+    device-resident fused path on the jax-jit backend when the plan and
+    reducers qualify, and the host ``plan.run_range`` pipeline otherwise —
+    the same bit-equal dispatch ``Session.sweep`` makes in-process, so
+    work units reuse one compiled fused step per worker.
 
     Messages out: ``("start", uid, pid)`` when a unit begins (feeds the
     coordinator's straggler/death bookkeeping), ``("ok", uid, states)``
@@ -65,7 +71,7 @@ def _worker_main(plan, task_q, result_q) -> None:
     on failure (``uid == -1`` if the evaluator itself failed to build).
     """
     try:
-        evaluator = plan.evaluator()
+        fold_range = _stream.make_range_folder(plan)
     except BaseException:
         result_q.put(("err", -1, traceback.format_exc()))
         return
@@ -78,7 +84,7 @@ def _worker_main(plan, task_q, result_q) -> None:
             result_q.put(("start", uid, os.getpid()))
             _maybe_fault(uid)
             reducers = [cls.from_state(s) for cls, s in reducer_states]
-            plan.run_range(lo, hi, reducers, eval_chunk=evaluator)
+            fold_range(lo, hi, reducers)
             result_q.put(("ok", uid, [r.state_dict() for r in reducers]))
         except BaseException:
             result_q.put(("err", uid, traceback.format_exc()))

@@ -317,13 +317,29 @@ class BatchEstimate:
         return out
 
 
-def estimate_batch(batch: GroupBatch, xp=np) -> BatchEstimate:
-    """Eq. 3 classification + Eq. 1 execution time for every kernel at once."""
+def estimate_batch(batch: GroupBatch, xp=np,
+                   paired_kernel: bool = False) -> BatchEstimate:
+    """Eq. 3 classification + Eq. 1 execution time for every kernel at once.
+
+    ``paired_kernel=True`` asserts ``batch.kernel`` is exactly
+    ``concat([arange(n), arange(n)])`` (two groups per kernel, as the sweep
+    scorer builds) and replaces every segment reduction with the split add
+    ``data[:n] + data[n:]``.  This is bit-equal to the scatter-based
+    segment sum — each segment receives exactly two contributions, and for
+    two terms IEEE addition is order-independent (``0 + a == a`` and
+    ``a + b == b + a`` are exact) — but avoids the serialized scatter,
+    which dominates the fused device step's runtime on CPU.
+    """
     if xp is not np:
         enable_jax()
     n = batch.n_kernels
     count = xp.asarray(batch.count)
-    n_lsu = _segment_sum(count, batch.kernel, n, xp)[batch.kernel]
+    if paired_kernel:
+        seg = lambda data: data[:n] + data[n:]  # noqa: E731
+        n_lsu = xp.concatenate([seg(count)] * 2)
+    else:
+        seg = lambda data: _segment_sum(data, batch.kernel, n, xp)  # noqa: E731
+        n_lsu = seg(count)[batch.kernel]
     g = group_timing(
         lsu_type=batch.lsu_type,
         ls_width=batch.ls_width,
@@ -343,7 +359,6 @@ def estimate_batch(batch: GroupBatch, xp=np) -> BatchEstimate:
         max_th=batch.max_th,
         xp=xp,
     )
-    seg = lambda data: _segment_sum(data, batch.kernel, n, xp)  # noqa: E731
     t_exe = seg(count * g["t_total"])
     t_ideal = seg(count * batch.delta * g["t_ideal"])
     t_ovh = seg(count * batch.delta * g["t_ovh"])
@@ -357,6 +372,6 @@ def estimate_batch(batch: GroupBatch, xp=np) -> BatchEstimate:
         bound_ratio=ratio,
         memory_bound=(ratio >= 1.0) | latency_bound,
         total_bytes=total_bytes,
-        n_lsu=_segment_sum(count, batch.kernel, n, xp),
+        n_lsu=seg(count),
         groups=g,
     )

@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+from time import perf_counter as _perf_counter
 from typing import Callable, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -174,6 +175,29 @@ class _ExactSum:
         return math.fsum(self.partials)
 
 
+def _tree_sum(x: np.ndarray) -> float:
+    """Deterministic binary-tree sum of a 1-D float64 array.
+
+    Zero-pads to the next power of two and repeatedly folds ``x[0::2] +
+    x[1::2]``.  The pairing is a pure function of element *positions*, and
+    zero-extension is exact for the non-negative summands the stats fold
+    feeds it (``x + 0.0 == x``), so the result is independent of how much
+    the array was padded — an array of ``m`` values zero-extended to any
+    power of two >= ``m`` sums to the same bits.  That is the contract that
+    lets the fixed-shape on-device fold (:mod:`repro.core.device_stream`),
+    which always sums a full zero-masked chunk, reproduce the host fold's
+    per-chunk sums bit-for-bit.
+    """
+    m = len(x)
+    if m == 0:
+        return 0.0
+    buf = np.zeros(1 << (m - 1).bit_length(), dtype=np.float64)
+    buf[:m] = x
+    while len(buf) > 1:
+        buf = buf[0::2] + buf[1::2]
+    return float(buf[0])
+
+
 def _chan_merge(n_a: int, mean_a: float, m2_a: float,
                 n_b: int, mean_b: float, m2_b: float,
                 ) -> tuple[int, float, float]:
@@ -281,10 +305,16 @@ class StatsReducer(Reducer):
         if not m:
             return
         self.memory_bound += int(np.asarray(cols["memory_bound"]).sum())
-        self._t_exe_sum.add(float(t.sum()))
-        self._total_bytes_sum.add(float(np.asarray(cols["total_bytes"]).sum()))
-        cmean = float(t.mean())
-        cm2 = float(((t - cmean) ** 2).sum())
+        # All chunk-level reductions go through the position-deterministic
+        # _tree_sum so the fused on-device fold (device_stream), which sums
+        # zero-masked fixed-shape chunks, produces bit-identical chunk
+        # contributions to this host fold.
+        s = _tree_sum(t)
+        self._t_exe_sum.add(s)
+        self._total_bytes_sum.add(
+            _tree_sum(np.asarray(cols["total_bytes"], dtype=np.float64)))
+        cmean = s / m
+        cm2 = _tree_sum((t - cmean) ** 2)
         self.n_points, self._mean, self._m2 = _chan_merge(
             self.n_points, self._mean, self._m2, m, cmean, cm2)
         i = int(np.argmin(t))                  # first occurrence on ties
@@ -508,6 +538,7 @@ def run_stream(
     *,
     workers: int | None = None,
     chunk_order: Sequence[int] | None = None,
+    stage_times: dict | None = None,
 ) -> StreamOutcome:
     """Drive ``eval_chunk`` over ``n`` points in fixed-shape chunks.
 
@@ -524,6 +555,13 @@ def run_stream(
 
     ``chunk_order`` permutes which chunk is evaluated when (testing hook
     for the order-invariance property); folding follows that order.
+
+    ``stage_times`` (a mutable dict) accumulates the per-stage wall-time
+    breakdown ``Session.sweep(profile=True)`` reports: ``score_s`` (chunk
+    evaluation, which on jax includes the host<->device ``transfer_s`` the
+    evaluator itself accounts) and ``reduce_s`` (reducer folds).  Only the
+    serial loop is instrumented — the threaded path overlaps stages, so
+    per-stage attribution would be meaningless there.
     """
     if chunk_size < 1:
         raise ValueError("chunk_size must be >= 1")
@@ -563,6 +601,20 @@ def run_stream(
             while pending:
                 fut, v = pending.popleft()
                 fold(fut.result(), v)
+    elif stage_times is not None:
+        import time as _time
+
+        stage_times.setdefault("score_s", 0.0)
+        stage_times.setdefault("reduce_s", 0.0)
+        for s in starts:
+            ids, valid = _chunk_ids(s, n, chunk_size)
+            t0 = _time.perf_counter()
+            cols = eval_chunk(ids)
+            t1 = _time.perf_counter()
+            fold(cols, valid)
+            t2 = _time.perf_counter()
+            stage_times["score_s"] += t1 - t0
+            stage_times["reduce_s"] += t2 - t1
     else:
         for s in starts:
             ids, valid = _chunk_ids(s, n, chunk_size)
@@ -718,7 +770,8 @@ class SweepPlan:
 
     # -- evaluation ---------------------------------------------------------
 
-    def evaluator(self) -> Callable[[np.ndarray], dict[str, np.ndarray]]:
+    def evaluator(self, stage_times: dict | None = None,
+                  ) -> Callable[[np.ndarray], dict[str, np.ndarray]]:
         """The chunk-scoring function, rebuilt from plan data alone.
 
         Maps a fixed-shape id block to the chunk-column dict the reducers
@@ -733,6 +786,10 @@ class SweepPlan:
         exactly one array shape — feasible ids are re-padded to the chunk
         shape for scoring and sliced back down after — so constraints never
         trigger recompilation.
+
+        ``stage_times`` (see :func:`run_stream`) accumulates ``enumerate_s``
+        (mixed-radix decode + axis gathers) here and, on the jax-jit
+        backend, ``transfer_s`` inside the estimator.
         """
         from repro.core import sweep as _sweep
 
@@ -752,7 +809,7 @@ class SweepPlan:
             sharding = (_compat.data_sharding(ndev)
                         if ndev > 1 and self.chunk_size % ndev == 0 else None)
             estimator = (lambda b: _api._jax_estimate_batch(
-                b, sharding=sharding))
+                b, sharding=sharding, stage_times=stage_times))
         elif backend == "numpy-batch":
             from repro.core import model_batch as _mb
 
@@ -760,9 +817,14 @@ class SweepPlan:
 
         def score_ids(ids: np.ndarray) -> dict[str, np.ndarray]:
             m = len(ids)
+            t0 = _perf_counter() if stage_times is not None else 0.0
             codes = enum.codes(ids)
             numeric = {k: np.asarray(lists[k])[codes[k]] for k in num_names}
             cats = {k: (lists[k], codes[k]) for k in cat_names}
+            if stage_times is not None:
+                stage_times["enumerate_s"] = (
+                    stage_times.get("enumerate_s", 0.0)
+                    + _perf_counter() - t0)
             if backend == "scalar":
                 result = _sweep._score_scalar(dict(numeric), m, cats)
                 est, resource = result.estimate, result.resource
@@ -918,3 +980,45 @@ class SweepPlan:
             calibration_factor=float(d["calibration_factor"]),
             chunk_size=int(d["chunk_size"]),
             constraints=constraints)
+
+
+def make_range_folder(plan: SweepPlan) -> Callable:
+    """``fold(lo, hi, reducers)`` for chunk-aligned ranges of ``plan``.
+
+    The fastest eligible implementation is chosen once per folder: on the
+    unconstrained single-device jax-jit backend that is the fused
+    device-resident step (:mod:`repro.core.device_stream` — in-jit
+    enumeration + scoring + reducer folds, one host pull per range), with a
+    transparent fall-through to the host ``plan.run_range`` loop for
+    unsupported reducer sets or a device-side capacity overflow.  Both
+    paths are bit-equal by the reducer merge contract, so callers (the
+    distributed worker loop) never see which one ran.  The host evaluator
+    is built lazily — a worker whose every unit folds on-device never pays
+    for it.
+    """
+    device = None
+    if plan.backend == "jax-jit" and not plan.constraints:
+        try:
+            from repro.core import device_stream as _dev
+        except ImportError:  # pragma: no cover - jax-less install
+            _dev = None
+        if _dev is not None:
+            device = _dev.DeviceSweep.build(plan)
+
+    evaluator = None
+
+    def fold_range(lo: int, hi: int, reducers: Iterable[Reducer]) -> None:
+        nonlocal evaluator
+        reducers = tuple(reducers)
+        if device is not None and device.supports(reducers):
+            from repro.core.device_stream import DeviceFoldOverflow
+            try:
+                device.fold_range(lo, hi, reducers)
+                return
+            except DeviceFoldOverflow:
+                pass        # reducers untouched; refold on the host path
+        if evaluator is None:
+            evaluator = plan.evaluator()
+        plan.run_range(lo, hi, reducers, eval_chunk=evaluator)
+
+    return fold_range

@@ -484,7 +484,9 @@ def _score_scalar(points: dict, n: int,
     cols = {k: np.empty(n) for k in
             ("t_exe", "t_ideal", "t_ovh", "bound_ratio", "total_bytes")}
     memory_bound = np.empty(n, dtype=bool)
-    n_lsu = np.empty(n, dtype=np.int64)
+    # float64 like the batched path, whose np.bincount segment sum promotes
+    # the integer LSU counts — reducer states must agree across backends
+    n_lsu = np.empty(n)
     resource = np.empty(n)
     for i in range(n):
         simd = int(points["simd"][i])

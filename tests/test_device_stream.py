@@ -1,0 +1,242 @@
+"""Device-resident fold (repro.core.device_stream): bit-equality with the
+host merge/state_dict protocol under arbitrary chunk partitions across all
+three backends, capacity-overflow fallback, per-stage profile attribution,
+and the persistent compilation cache."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import Session, Space
+from repro.core import DDR4_1866, DDR4_2666, LsuType
+from repro.core import device_stream as dev
+from repro.core.stream import (ParetoReducer, StatsReducer, TopKReducer,
+                               default_reducers, make_range_folder)
+
+ALL_TYPES = [LsuType.BC_ALIGNED, LsuType.BC_NON_ALIGNED,
+             LsuType.BC_WRITE_ACK, LsuType.ATOMIC_PIPELINED]
+
+#: Same 864-point grid as tests/test_stream.py (the acceptance grid).
+GRID = dict(
+    lsu_type=ALL_TYPES,
+    n_ga=[1, 2, 4],
+    simd=[1, 4, 16],
+    n_elems=[1 << 14, 1 << 16],
+    delta=[1, 2, 7],
+    include_write=[False, True],
+    dram=[DDR4_1866, DDR4_2666],
+)
+N = 864
+
+multi_device = pytest.mark.skipif(
+    jax.local_device_count() > 1,
+    reason="device fold defers to host chunk sharding on multi-device")
+
+
+def _plan(backend: str, chunk: int):
+    return Session(backend=backend).plan(Space.grid(**GRID),
+                                         chunk_size=chunk)
+
+
+def _canon(reducers) -> list:
+    """state_dicts normalized to the representation-invariant form.
+
+    Shewchuk partial *lists* are not canonical — ``merge`` re-runs two-sum
+    over them and may compact ``[a, b, c, T]`` into ``[a+b+c, T]`` while
+    preserving the exact total — so the sums compare through ``math.fsum``
+    (exact for non-overlapping partials).  The Pareto front's held order is
+    ascending-id on the device path and front-algorithm order on the host,
+    so front rows are sorted by id.  Everything else must match exactly.
+    """
+    out = []
+    for r in reducers:
+        st = r.state_dict()
+        if isinstance(r, StatsReducer):
+            st = dict(st, t_exe_sum=math.fsum(st["t_exe_sum"]),
+                      total_bytes_sum=math.fsum(st["total_bytes_sum"]))
+        elif isinstance(r, ParetoReducer) and st["cols"] is not None:
+            order = np.argsort(np.asarray(st["cols"]["id"][1]))
+            st = dict(st, cols={c: [d, [v[i] for i in order]]
+                                for c, (d, v) in st["cols"].items()})
+        out.append(st)
+    return out
+
+
+def _protocol_fold(backend: str, chunk: int, bounds: list[int]) -> list:
+    """Fold each ``bounds`` range into fresh reducers, merge the states.
+
+    This is exactly the distributed coordinator/worker protocol
+    (repro.core.distributed): per-range states travel as ``state_dict()``
+    and merge in range order, so every backend sees the identical merge
+    tree and the results must agree bit-for-bit.
+    """
+    fold = make_range_folder(_plan(backend, chunk))
+    base = default_reducers(10)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        fresh = tuple(r.fresh() for r in base)
+        fold(lo, hi, fresh)
+        for b, r in zip(base, fresh):
+            b.merge(type(b).from_state(r.state_dict()))
+    return _canon(base)
+
+
+@pytest.fixture(scope="module")
+def materialized():
+    return Session().sweep(Space.grid(**GRID))
+
+
+class TestDeviceFoldBitEquality:
+    @multi_device
+    @pytest.mark.parametrize("chunk", [37, 100, 864, 4096])
+    def test_whole_grid_matches_host_fold(self, chunk):
+        """Device fold of [0, n) == host fold, any chunk size (incl. a
+        non-dividing chunk with a masked padded tail and one > n)."""
+        plan = _plan("jax-jit", chunk)
+        drv = dev.DeviceSweep.build(plan)
+        assert drv is not None
+        device = default_reducers(10)
+        assert drv.supports(device)
+        drv.fold_range(0, N, device)
+
+        host = default_reducers(10)
+        hplan = _plan("numpy-batch", chunk)
+        hplan.run_range(0, N, host, eval_chunk=hplan.evaluator())
+        assert _canon(device) == _canon(host)
+
+    @multi_device
+    def test_session_sweep_takes_device_path(self, materialized):
+        """The standard jax-jit streaming sweep actually runs device-fused
+        and still bit-matches the materialized report."""
+        st = Session(backend="jax-jit").sweep(Space.grid(**GRID),
+                                              chunk_size=100, profile=True)
+        assert st.summary()["profile"]["path"] == "device-fused"
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(st.point_ids)[st.pareto()]),
+            np.asarray(materialized.pareto()))
+        assert st.top_k(10) == materialized.top_k(10)
+        assert st.stats["t_exe_min"] == float(np.min(materialized.t_exe))
+        assert st.stats["t_exe_min_id"] == int(np.argmin(materialized.t_exe))
+
+
+def _check_partition(bounds: list[int]) -> None:
+    ref = _protocol_fold("numpy-batch", 100, bounds)
+    for backend in ("jax-jit", "scalar"):
+        assert _protocol_fold(backend, 100, bounds) == ref, \
+            f"{backend} diverged from numpy-batch on partition {bounds}"
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class TestPartitionProperty:
+    """Device folds == host folds through the merge/state_dict protocol
+    under *arbitrary* chunk-aligned partitions of [0, n)."""
+
+    if HAVE_HYPOTHESIS:
+        @multi_device
+        @settings(max_examples=8, deadline=None)
+        @given(cuts=hyp_st.sets(
+            hyp_st.sampled_from(list(range(100, N, 100))), max_size=8))
+        def test_random_partitions(self, cuts):
+            _check_partition([0, *sorted(cuts), N])
+    else:
+        @multi_device
+        @pytest.mark.parametrize("seed", range(4))
+        def test_random_partitions(self, seed):
+            rng = random.Random(seed)
+            interior = list(range(100, N, 100))
+            cuts = sorted(rng.sample(interior,
+                                     rng.randint(0, len(interior))))
+            _check_partition([0, *cuts, N])
+
+    @multi_device
+    def test_degenerate_partitions(self):
+        _check_partition([0, N])                    # single range
+        _check_partition([0, *range(100, N, 100), N])   # every chunk alone
+
+
+class TestOverflowFallback:
+    @multi_device
+    def test_fold_range_raises_and_leaves_reducers_untouched(
+            self, monkeypatch):
+        monkeypatch.setattr(dev, "FRONT_CAP", 2)
+        drv = dev.DeviceSweep.build(_plan("jax-jit", 100))
+        assert drv is not None and drv.front_cap == 2
+        reducers = default_reducers(10)
+        before = [r.state_dict() for r in reducers]
+        with pytest.raises(dev.DeviceFoldOverflow):
+            drv.fold_range(0, N, reducers)
+        assert [r.state_dict() for r in reducers] == before
+
+    @multi_device
+    def test_session_sweep_falls_back_to_host(self, monkeypatch,
+                                              materialized):
+        assert len(materialized.pareto()) > 2   # cap 2 must overflow
+        monkeypatch.setattr(dev, "FRONT_CAP", 2)
+        st = Session(backend="jax-jit").sweep(Space.grid(**GRID),
+                                              chunk_size=100, profile=True)
+        assert st.summary()["profile"]["path"] == "host-stream"
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(st.point_ids)[st.pareto()]),
+            np.asarray(materialized.pareto()))
+        assert st.top_k(10) == materialized.top_k(10)
+
+
+class TestEligibility:
+    def test_non_jax_backend_is_ineligible(self):
+        assert dev.DeviceSweep.build(_plan("numpy-batch", 100)) is None
+
+    @multi_device
+    def test_constrained_plan_is_ineligible(self):
+        plan = Session(backend="jax-jit").plan(
+            Space.grid(**GRID), chunk_size=100,
+            constraints=(lambda cols: np.asarray(cols["n_ga"]) > 1,))
+        assert dev.DeviceSweep.build(plan) is None
+
+    @multi_device
+    def test_custom_reducer_is_unsupported(self):
+        class Spy(StatsReducer):
+            pass
+
+        drv = dev.DeviceSweep.build(_plan("jax-jit", 100))
+        assert drv is not None
+        assert drv.supports(default_reducers(10))
+        assert not drv.supports((Spy(),))
+        assert not drv.supports((TopKReducer(3, key="no_such_column"),))
+
+
+class TestProfileAndCache:
+    def test_host_stream_profile_stages(self):
+        st = Session().sweep(Space.grid(**GRID), chunk_size=100,
+                             profile=True)
+        prof = st.summary()["profile"]
+        assert prof["path"] == "host-stream"
+        for key in ("enumerate_s", "score_s", "reduce_s", "total_s"):
+            assert prof[key] >= 0.0
+
+    @multi_device
+    def test_device_profile_stages(self):
+        st = Session(backend="jax-jit").sweep(Space.grid(**GRID),
+                                              chunk_size=100, profile=True)
+        prof = st.summary()["profile"]
+        assert prof["path"] == "device-fused"
+        for key in ("compile_s", "score_s", "transfer_s", "enumerate_s",
+                    "reduce_s", "total_s"):
+            assert prof[key] >= 0.0
+
+    def test_compilation_cache_enable_is_idempotent(self):
+        from repro import compat
+
+        first = compat.enable_compilation_cache()
+        assert compat.enable_compilation_cache() == first
+        if first:       # directory really configured, never raises
+            assert jax.config.jax_compilation_cache_dir
